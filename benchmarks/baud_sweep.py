@@ -1,0 +1,30 @@
+"""Paper Fig 16: GAPBS score error vs UART baud rate."""
+from __future__ import annotations
+
+from .common import run_workload, save_json, trial_mean_ns
+from repro.core.workloads import graphgen
+
+BAUDS = [115200, 460800, 921600, 3_000_000]
+
+
+def run(quick=False):
+    g = graphgen.rmat(5 if quick else 7, 8, weights=True)
+    rows = []
+    for name in (["bc"] if quick else ["bc", "sssp"]):
+        _, rep0, _ = run_workload(name, ["g.bin", "2", "2"], mode="oracle",
+                                  files={"g.bin": g})
+        base = trial_mean_ns(rep0.stdout)
+        for baud in (BAUDS[:2] if quick else BAUDS):
+            _, rep, _ = run_workload(name, ["g.bin", "2", "2"],
+                                     mode="fase", baud=baud,
+                                     files={"g.bin": g})
+            err = (trial_mean_ns(rep.stdout) - base) / base
+            rows.append(dict(workload=name, baud=baud, err=err))
+            print(f"baud_sweep,{name}@{baud},{err*100:.1f},score-err%",
+                  flush=True)
+    save_json("baud_sweep.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

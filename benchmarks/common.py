@@ -1,0 +1,53 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.runtime import FaseRuntime
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
+                 hfutex=True, files=None, mem=1 << 23, target="pysim",
+                 max_ticks=1 << 36):
+    if target == "pysim":
+        tgt = PySim(n_cores, mem)
+    else:
+        from repro.core.interface import JaxTarget
+        tgt = JaxTarget(n_cores, mem)
+    rt = FaseRuntime(tgt, mode=mode, baud=baud, hfutex=hfutex)
+    rt.load(build(name), [name] + argv_tail, files=files or {})
+    t0 = time.time()
+    rep = rt.run(max_ticks=max_ticks)
+    wall = time.time() - t0
+    return rt, rep, wall
+
+
+def parse_kv(stdout: bytes) -> dict:
+    out = {}
+    for line in stdout.decode().splitlines():
+        parts = line.split()
+        if len(parts) == 2 and parts[1].lstrip("-").isdigit():
+            out.setdefault(parts[0], []).append(int(parts[1]))
+    return out
+
+
+def trial_mean_ns(stdout: bytes) -> float:
+    vals = parse_kv(stdout).get("trial_ns", [])
+    return sum(vals) / max(len(vals), 1)
+
+
+def save_json(name, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def load_json(name):
+    with open(os.path.join(RESULTS_DIR, name)) as f:
+        return json.load(f)

@@ -1,0 +1,27 @@
+"""Paper Fig 18: CoreMark accuracy, FASE vs full-system oracle; error
+shrinks ~1/T toward the paper's <1% as iterations grow (the fixed remote
+clock_gettime stall amortises)."""
+from __future__ import annotations
+
+from .common import parse_kv, run_workload, save_json
+
+
+def run(quick=False):
+    rows = []
+    for iters in ([2, 5] if quick else [5, 10, 20, 40]):
+        res = {}
+        for mode in ("oracle", "fase"):
+            rt, rep, wall = run_workload("coremark", [str(iters)],
+                                         mode=mode, n_cores=1)
+            res[mode] = parse_kv(rep.stdout)["coremark_ns"][0]
+        err = (res["fase"] - res["oracle"]) / res["oracle"]
+        rows.append(dict(iters=iters, fase_ns=res["fase"],
+                         oracle_ns=res["oracle"], err=err))
+        print(f"coremark_accuracy,iters={iters},{res['fase']/1e3:.0f},"
+              f"err={err*100:+.2f}%", flush=True)
+    save_json("coremark_accuracy.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

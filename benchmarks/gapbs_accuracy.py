@@ -1,0 +1,45 @@
+"""Paper Fig 12: GAPBS score + user-CPU-time accuracy, FASE vs full-system
+oracle, across 1/2/4 threads.  Also feeds Fig 13 (traffic composition)."""
+from __future__ import annotations
+
+from .common import run_workload, save_json, trial_mean_ns
+from repro.core.workloads import graphgen
+
+WORKLOADS = ["bc", "bfs", "cc", "pr", "sssp", "tc"]
+THREADS = [1, 2, 4]
+SCALE, DEG, TRIALS = 7, 8, 2
+
+
+def run(quick=False):
+    scale = 5 if quick else SCALE
+    g = graphgen.rmat(scale, DEG, weights=True)
+    rows = []
+    for name in (WORKLOADS[:2] if quick else WORKLOADS):
+        for t in ([1, 2] if quick else THREADS):
+            res = {}
+            for mode in ("oracle", "fase"):
+                rt, rep, wall = run_workload(
+                    name, ["g.bin", str(t), str(TRIALS)], mode=mode,
+                    files={"g.bin": g})
+                res[mode] = dict(
+                    score_ns=trial_mean_ns(rep.stdout),
+                    uticks=sum(rep.uticks), ticks=rep.ticks,
+                    traffic=rep.traffic, traffic_total=rep.traffic_total,
+                    syscalls=rep.syscalls, stall=rep.stall,
+                    sched=rep.sched, hfutex=rep.hfutex, wall=wall)
+            e_score = (res["fase"]["score_ns"] - res["oracle"]["score_ns"]) \
+                / max(res["oracle"]["score_ns"], 1)
+            e_utime = (res["fase"]["uticks"] - res["oracle"]["uticks"]) \
+                / max(res["oracle"]["uticks"], 1)
+            rows.append(dict(workload=name, threads=t,
+                             score_err=e_score, utime_err=e_utime, **res))
+            print(f"gapbs_accuracy,{name}-{t}T,"
+                  f"{res['fase']['score_ns']/1e3:.0f},"
+                  f"score_err={e_score*100:+.1f}% "
+                  f"utime_err={e_utime*100:+.2f}%", flush=True)
+    save_json("gapbs_accuracy.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig 17: HFutex impact on UART traffic (BC/CC/PR, 2 threads)."""
+from __future__ import annotations
+
+from .common import run_workload, save_json
+from repro.core.workloads import graphgen
+
+
+def run(quick=False):
+    g = graphgen.rmat(5 if quick else 7, 8, weights=True)
+    rows = []
+    for name in (["bc"] if quick else ["bc", "cc", "pr"]):
+        res = {}
+        for hf in (False, True):
+            rt, rep, _ = run_workload(name, ["g.bin", "2", "2"],
+                                      mode="fase", hfutex=hf,
+                                      files={"g.bin": g})
+            res[hf] = dict(traffic=rep.traffic_total,
+                           futex_sys=rep.syscalls.get("futex", 0),
+                           hits=rep.hfutex["hits"])
+        redu = 1 - res[True]["traffic"] / max(res[False]["traffic"], 1)
+        rows.append(dict(workload=name, nhf=res[False], hf=res[True],
+                         traffic_reduction=redu))
+        print(f"hfutex,{name}-2T,{res[True]['hits']},"
+              f"traffic-{redu*100:.1f}%", flush=True)
+    save_json("hfutex.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""§Perf hillclimbs: three selected (arch x shape) pairs, hypothesis ->
+change -> re-lower -> validate, driving the dominant roofline term down.
+
+Pairs (selection rationale in EXPERIMENTS.md §Perf):
+  A qwen3-8b/decode_32k   — most representative of the paper's technique
+                            (paged decode); baseline FSDP params make it
+                            collective-bound -> variant tp_serve.
+  B xlstm-350m/train_4k   — worst roofline fraction (tiny model, 256-way
+                            TP absurd) -> variant dp_only.
+  C llama3-405b/train_4k  — most collective-bound (per-microbatch FSDP
+                            regathers) -> variants micro4/micro2.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PAIRS = [
+    ("qwen3-8b", "decode_32k", ["tp_serve"]),
+    ("xlstm-350m", "train_4k", ["dp_only"]),
+    ("llama3-405b", "train_4k", ["micro4", "micro2"]),
+]
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+    out = []
+    for arch, shape, variants in PAIRS:
+        for variant in ["baseline"] + variants:
+            try:
+                res = run_cell(arch, shape, False, variant=variant)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch, "shape": shape, "variant": variant,
+                       "status": f"FAIL {type(e).__name__}: {str(e)[:200]}"}
+                print(res, flush=True)
+            out.append(res)
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "hillclimb.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("saved", path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+"""EXPERIMENTS.md §Roofline: render the dry-run table with the three
+roofline terms, dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+from .common import load_json, save_json
+from repro.configs import CONFIGS
+from repro.launch.steps import SHAPES
+
+PEAK = 197e12
+
+
+def model_flops_per_step(arch, shape):
+    cfg = CONFIGS[arch]
+    n = cfg.active_param_count()
+    sh = SHAPES[shape]
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        return 6.0 * n * tokens
+    if sh["kind"] == "prefill":
+        return 2.0 * n * sh["batch"] * sh["seq"]
+    return 2.0 * n * sh["batch"]            # decode: one token / seq
+
+
+def run(quick=False):
+    try:
+        cells = load_json("dryrun_all.json")
+    except FileNotFoundError:
+        print("roofline,skipped,0,run launch/dryrun.py first")
+        return []
+    rows = []
+    for c in cells:
+        if c.get("status") != "OK":
+            rows.append(c)
+            continue
+        mf = model_flops_per_step(c["arch"], c["shape"])
+        hlo_total = c["hlo_flops_per_device"] * c["n_chips"]
+        r = c["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        c["model_flops"] = mf
+        c["useful_flop_frac"] = mf / hlo_total if hlo_total else 0.0
+        c["roofline_frac"] = r["compute_s"] / bound if bound else 0.0
+        rows.append(c)
+        print(f"roofline,{c['arch']}|{c['shape']}|{c['mesh']},"
+              f"{bound*1e6:.0f},dom={r['dominant']} "
+              f"frac={c['roofline_frac']*100:.1f}% "
+              f"useful={c['useful_flop_frac']*100:.0f}%", flush=True)
+    save_json("roofline_table.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: `python -m benchmarks.run [--quick]`.
+
+Each module reproduces one paper table/figure (see DESIGN.md §7 index).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from . import (baud_sweep, coremark_accuracy, gapbs_accuracy,
+                   hfutex_bench, htp_vs_direct, roofline, scale_sweep,
+                   serving_traffic, speedup, stall_breakdown)
+    modules = [
+        ("htp_vs_direct", htp_vs_direct),
+        ("coremark_accuracy", coremark_accuracy),
+        ("speedup", speedup),
+        ("gapbs_accuracy", gapbs_accuracy),
+        ("traffic/stall_breakdown", stall_breakdown),
+        ("baud_sweep", baud_sweep),
+        ("hfutex", hfutex_bench),
+        ("scale_sweep", scale_sweep),
+        ("serving_traffic", serving_traffic),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run(quick=quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig 14/15: error vs data scale for BFS and TC."""
+from __future__ import annotations
+
+from .common import run_workload, save_json, trial_mean_ns
+from repro.core.workloads import graphgen
+
+
+def run(quick=False):
+    rows = []
+    scales = [5, 6] if quick else [6, 7, 8]
+    for name in (["bfs"] if quick else ["bfs", "tc"]):
+        for scale in scales:
+            g = graphgen.rmat(scale, 8, weights=True)
+            _, rep0, _ = run_workload(name, ["g.bin", "2", "2"],
+                                      mode="oracle", files={"g.bin": g})
+            _, rep1, _ = run_workload(name, ["g.bin", "2", "2"],
+                                      mode="fase", files={"g.bin": g})
+            base = trial_mean_ns(rep0.stdout)
+            err = (trial_mean_ns(rep1.stdout) - base) / base
+            rows.append(dict(workload=name, scale=scale, err=err))
+            print(f"scale_sweep,{name}-2^{scale},{err*100:.1f},score-err%",
+                  flush=True)
+    save_json("scale_sweep.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Layer-B analogue of Fig 17: device-side stop-mask polling amortises
+host<->device syncs in the serving engine (poll_every sweep)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import save_json
+from repro.configs import CONFIGS
+from repro.models import core as M
+from repro.serving.engine import Request, ServeEngine
+
+
+def run(quick=False):
+    cfg = CONFIGS["qwen3-8b"].smoke()
+    params = M.init_params(cfg, 0)
+    rows = []
+    for poll in (1, 8):
+        eng = ServeEngine(cfg, params, slots=2, max_seq=128,
+                          poll_every=poll)
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=[3 + i, 9, 2], max_new=8,
+                               eos=1))
+        done = eng.run()
+        rows.append(dict(poll_every=poll, steps=eng.steps,
+                         d2h=eng.traffic.d2h_bytes,
+                         h2d=eng.traffic.h2d_bytes,
+                         finished=len(done)))
+        print(f"serving_traffic,poll={poll},{eng.traffic.d2h_bytes},"
+              f"d2h bytes over {eng.steps} steps", flush=True)
+    save_json("serving_traffic.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

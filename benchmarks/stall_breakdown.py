@@ -1,0 +1,31 @@
+"""Paper Table IV: stall-time decomposition (controller / UART / runtime)
+for BC across thread counts."""
+from __future__ import annotations
+
+from .common import run_workload, save_json
+from repro.core.workloads import graphgen
+from repro.core.target.cpu import CLOCK_HZ
+
+
+def run(quick=False):
+    g = graphgen.rmat(5 if quick else 7, 8, weights=True)
+    rows = []
+    for t in ([1] if quick else [1, 2, 4]):
+        rt, rep, _ = run_workload("bc", ["g.bin", str(t), "2"],
+                                  mode="fase", files={"g.bin": g})
+        ms = lambda ticks: ticks / CLOCK_HZ * 1e3
+        row = dict(threads=t,
+                   controller_ms=ms(rep.stall["controller_cycles"]),
+                   uart_ms=ms(rep.stall["uart_ticks"]),
+                   runtime_ms=ms(rep.stall["runtime_ticks"]),
+                   total_ticks=rep.ticks)
+        rows.append(row)
+        print(f"stall_breakdown,bc-{t}T,{row['uart_ms']:.2f},"
+              f"ctrl={row['controller_ms']:.3f}ms "
+              f"runtime={row['runtime_ms']:.1f}ms", flush=True)
+    save_json("stall_breakdown.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

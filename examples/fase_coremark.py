@@ -1,0 +1,32 @@
+"""The paper's flagship demo: run CoreMark-lite on the FASE target.
+
+The benchmark binary (assembled RV64 user program) runs on the jitted XLA
+target processor; every syscall is served remotely by the host runtime
+through the HTP/UART model — no OS, no SoC.
+
+  PYTHONPATH=src python examples/fase_coremark.py [iters] [pysim|jax]
+"""
+import sys
+import time
+
+from repro.core.runtime import FaseRuntime
+from repro.core.workloads import build
+
+iters = sys.argv[1] if len(sys.argv) > 1 else "2"
+target = sys.argv[2] if len(sys.argv) > 2 else "jax"
+if target == "jax":
+    from repro.core.interface import JaxTarget
+    tgt = JaxTarget(1, 1 << 22)
+else:
+    from repro.core.target.pysim import PySim
+    tgt = PySim(1, 1 << 22)
+
+rt = FaseRuntime(tgt, mode="fase")
+rt.load(build("coremark"), ["coremark", iters])
+t0 = time.time()
+rep = rt.run(max_ticks=1 << 36)
+print(rep.stdout.decode())
+print(f"target time {rep.seconds*1e3:.2f} ms @100MHz | "
+      f"user time {rep.user_seconds*1e3:.2f} ms | wall {time.time()-t0:.1f}s")
+print(f"syscalls: {rep.syscalls}")
+print(f"UART traffic: {rep.traffic_total} bytes")

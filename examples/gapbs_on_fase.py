@@ -1,0 +1,19 @@
+"""Run an OpenMP-style multi-threaded graph benchmark (BFS) on the FASE
+target with 4 cores — dynamically scheduled threads, futex barriers, and
+remote syscalls over the modelled UART.
+
+  PYTHONPATH=src python examples/gapbs_on_fase.py
+"""
+from repro.core.runtime import FaseRuntime
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+
+g = graphgen.rmat(7, 8, weights=True)
+rt = FaseRuntime(PySim(4, 1 << 23), mode="fase")
+rt.load(build("bfs"), ["bfs", "g.bin", "4", "3"], files={"g.bin": g})
+rep = rt.run(max_ticks=1 << 36)
+print(rep.stdout.decode())
+print(f"threads cloned: {rep.syscalls.get('clone')} | "
+      f"futexes: {rep.syscalls.get('futex')} | "
+      f"hfutex hits: {rep.hfutex['hits']}")
+print(f"traffic by category: { {k: v for k, v in sorted(rep.traffic.items()) if v > 500} }")

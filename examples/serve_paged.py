@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests through the paged-KV engine
+(continuous batching + prefix sharing + stop-mask polling).
+
+  PYTHONPATH=src python examples/serve_paged.py
+"""
+from repro.configs import CONFIGS
+from repro.models import core as M
+from repro.serving.engine import Request, ServeEngine
+
+cfg = CONFIGS["qwen3-8b"].smoke()
+params = M.init_params(cfg, 0)
+eng = ServeEngine(cfg, params, slots=4, max_seq=128, poll_every=4)
+shared_prefix = list(range(2, 2 + 66))    # spans >1 page: prefix-shared
+for i in range(6):
+    eng.submit(Request(rid=i, prompt=shared_prefix + [100 + i],
+                       max_new=8, eos=1))
+done = eng.run()
+for r in sorted(done, key=lambda r: r.rid):
+    print(f"req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}")
+print(f"steps={eng.steps} kv={eng.kv.stats}")
+print(f"traffic h2d={eng.traffic.h2d_bytes}B d2h={eng.traffic.d2h_bytes}B "
+      f"by_cat={eng.traffic.by_cat}")

@@ -1,0 +1,20 @@
+"""End-to-end training driver with fault tolerance: trains a reduced model
+for a few hundred steps, checkpointing every 50, surviving an injected
+node failure at step 120.
+
+  PYTHONPATH=src python examples/train_lm.py [steps]
+"""
+import shutil
+import sys
+
+from repro.configs import CONFIGS
+from repro.training.train_loop import FailureInjector, train
+
+steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+shutil.rmtree("/tmp/repro_train_demo", ignore_errors=True)
+cfg = CONFIGS["chatglm3-6b"].smoke()
+losses = train(cfg, steps=steps, batch=8, seq=64,
+               ckpt_dir="/tmp/repro_train_demo", ckpt_every=50,
+               injector=FailureInjector(fail_at_steps=[min(120, steps//2)]))
+print(f"{len(losses)} steps run (incl. replay); "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -1,0 +1,1 @@
+from .registry import CONFIGS, FASE_ROCKET, get  # noqa: F401

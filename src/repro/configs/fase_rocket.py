@@ -1,0 +1,4 @@
+"""The paper's own target system (Rocket on KCU105, Table III)."""
+from .registry import FASE_ROCKET
+
+CONFIG = FASE_ROCKET

@@ -1,0 +1,3 @@
+"""FASE core — the paper's contribution: syscall emulation for a compiled
+target processor, split across a minimal CPU interface, the HTP protocol,
+and a host-side runtime.  See DESIGN.md."""

@@ -1,0 +1,53 @@
+"""UART channel model (paper §IV, Table III: 921600 bps, 8N2 framing).
+
+The channel is the FASE bottleneck the paper analyses: every HTP request's
+bytes serialise through it, and its occupancy is tracked in *target ticks*
+(100 MHz) so stall times compose directly with the jitted target's clock.
+Per-category byte counters reproduce the paper's traffic-composition
+figures (Fig 13, Fig 16, Fig 17).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from .target.cpu import CLOCK_HZ
+
+BITS_PER_BYTE_8N2 = 11  # 1 start + 8 data + 2 stop
+
+
+@dataclass
+class UartChannel:
+    baud: int = 921600
+    clock_hz: int = CLOCK_HZ
+    bits_per_byte: int = BITS_PER_BYTE_8N2
+    enabled: bool = True          # False = oracle mode (no channel time)
+    busy_until: int = 0           # tick when the line becomes free
+    total_bytes: int = 0
+    bytes_by_cat: dict = field(default_factory=lambda: defaultdict(int))
+
+    def ticks_for_bytes(self, nbytes: int) -> int:
+        if not self.enabled:
+            return 0
+        return int(round(nbytes * self.bits_per_byte * self.clock_hz
+                         / self.baud))
+
+    def send(self, nbytes: int, at_tick: int, category: str) -> int:
+        """Serialise ``nbytes`` starting no earlier than ``at_tick``.
+
+        Returns the completion tick.  Accounts bytes per category either
+        way (traffic composition is reported even in oracle mode).
+        """
+        self.total_bytes += nbytes
+        self.bytes_by_cat[category] += nbytes
+        if not self.enabled:
+            return at_tick
+        start = max(at_tick, self.busy_until)
+        end = start + self.ticks_for_bytes(nbytes)
+        self.busy_until = end
+        return end
+
+    def reset_stats(self):
+        self.total_bytes = 0
+        self.bytes_by_cat = defaultdict(int)
+        self.busy_until = 0

@@ -1,0 +1,171 @@
+"""FASE hardware controller — the behavioural twin of paper §IV-C.
+
+Bridges host runtime and target CPU through the minimal CPU interface:
+every HTP request from Table II is applied to the target as its documented
+injection/Reg-port pattern's *effect*, while its wire bytes and controller
+cycles are accounted against the UART channel model.  The two-level state
+machine of Fig 4 is therefore modelled as (request parse) -> (per-request
+execution pattern with known cost), which is exact for timing purposes
+because every pattern's cost is statically known from Table II.
+
+Timing contract: each method takes ``at`` (the target tick at which the
+host issues the request) and returns the completion tick after channel
+serialisation and controller execution.  ``stats`` accumulates the
+Table IV stall decomposition (controller vs UART).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from . import htp
+from .channel import UartChannel
+from .hfutex import HFutexCache
+from .target.cpu import CLOCK_HZ
+
+
+@dataclass
+class ControllerStats:
+    requests: dict = field(default_factory=dict)
+    controller_cycles: int = 0
+    uart_ticks: int = 0
+
+    def count(self, name):
+        self.requests[name] = self.requests.get(name, 0) + 1
+
+
+class FaseController:
+    """Host-side proxy for the on-FPGA FASE controller."""
+
+    def __init__(self, target, channel: UartChannel | None = None,
+                 hfutex: HFutexCache | None = None,
+                 direct_mode: bool = False):
+        self.t = target
+        self.channel = channel or UartChannel()
+        self.hfutex = hfutex or HFutexCache(target.n_cores)
+        self.direct_mode = direct_mode   # per-port baseline (no HTP)
+        self.stats = ControllerStats()
+
+    # ------------------------------------------------------------------
+    def _account(self, name: str, at: int, category: str,
+                 resp_extra: int = 0) -> int:
+        spec = htp.SPECS[name]
+        nbytes = (htp.direct_bytes(name) if self.direct_mode
+                  else spec.total_bytes) + resp_extra
+        self.stats.count(name)
+        end = self.channel.send(nbytes, at, f"htp:{name}")
+        if category:
+            self.channel.bytes_by_cat[f"sys:{category}"] += nbytes
+        self.stats.uart_ticks += max(0, end - at)
+        self.stats.controller_cycles += spec.ctrl_cycles
+        return end + (spec.ctrl_cycles if self.channel.enabled else 0)
+
+    # ---- instruction-stream control ----------------------------------
+    def redirect(self, cpu: int, pc: int, at: int, category: str = "") -> int:
+        done = self._account("Redirect", at, category)
+        self.t.redirect(cpu, pc, resume_tick=done)
+        return done
+
+    def next_info(self, cpu: int, at: int) -> tuple[int, int, int, int]:
+        """Dequeue exception info for ``cpu`` (already pending)."""
+        done = self._account("Next", at, "")
+        cause = self.t.csr_read(cpu, "mcause")
+        epc = self.t.csr_read(cpu, "mepc")
+        tval = self.t.csr_read(cpu, "mtval")
+        self.t.clear_pending(cpu)
+        return done, cause, epc, tval
+
+    def set_mmu(self, cpu: int, satp: int, at: int, category: str = "") -> int:
+        self.t.set_satp(cpu, satp)
+        return self._account("SetMMU", at, category)
+
+    def flush_tlb(self, cpu: int, at: int, category: str = "") -> int:
+        self.t.sfence(cpu)
+        return self._account("FlushTLB", at, category)
+
+    def synci(self, cpu: int, at: int, category: str = "") -> int:
+        return self._account("SyncI", at, category)
+
+    def hfutex_update(self, cpu: int, at: int) -> int:
+        return self._account("HFutex", at, "futex")
+
+    # ---- word-level ---------------------------------------------------
+    def reg_read(self, cpu: int, idx: int, at: int,
+                 category: str = "") -> tuple[int, int]:
+        done = self._account("RegR", at, category)
+        return done, self.t.reg_read(cpu, idx)
+
+    def reg_write(self, cpu: int, idx: int, val: int, at: int,
+                  category: str = "") -> int:
+        self.t.reg_write(cpu, idx, val)
+        return self._account("RegW", at, category)
+
+    def mem_read(self, cpu: int, pa: int, at: int,
+                 category: str = "") -> tuple[int, int]:
+        done = self._account("MemR", at, category)
+        return done, self.t.mem_read_word(pa)
+
+    def mem_write(self, cpu: int, pa: int, val: int, at: int,
+                  category: str = "") -> int:
+        self.t.mem_write_word(pa, val)
+        return self._account("MemW", at, category)
+
+    # ---- page-level -----------------------------------------------------
+    def page_set(self, cpu: int, ppn: int, val: int, at: int,
+                 category: str = "") -> int:
+        self.t.page_set(ppn, val)
+        return self._account("PageS", at, category)
+
+    def page_copy(self, cpu: int, src: int, dst: int, at: int,
+                  category: str = "") -> int:
+        self.t.page_copy(src, dst)
+        return self._account("PageCP", at, category)
+
+    def page_read(self, cpu: int, ppn: int, at: int,
+                  category: str = ""):
+        done = self._account("PageR", at, category)
+        return done, self.t.page_read(ppn)
+
+    def page_write(self, cpu: int, ppn: int, words, at: int,
+                   category: str = "") -> int:
+        self.t.page_write(ppn, words)
+        return self._account("PageW", at, category)
+
+    # ---- perf ----------------------------------------------------------
+    def tick(self, at: int) -> tuple[int, int]:
+        done = self._account("Tick", at, "")
+        return done, self.t.get_ticks()
+
+    def utick(self, cpu: int, at: int) -> tuple[int, int]:
+        done = self._account("UTick", at, "")
+        return done, self.t.get_uticks(cpu)
+
+    # ------------------------------------------------------------------
+    # Hardware futex-wake filter (Next FSM fast path, §V-B).  Peeks the
+    # syscall registers through the Reg ports (controller-local, no UART)
+    # and short-circuits a masked FUTEX_WAKE.
+    # ------------------------------------------------------------------
+    FUTEX_NR = 98
+    FUTEX_WAKE_OPS = (1, 129)   # FUTEX_WAKE, | FUTEX_PRIVATE_FLAG
+
+    def try_hfutex_fast_path(self, cpu: int, cause: int, epc: int,
+                             at: int) -> int | None:
+        """Returns completion tick if handled locally, else None."""
+        if not self.hfutex.enabled or cause != 8:   # ecall from U only
+            return None
+        a7 = self.t.reg_read(cpu, 17)
+        if a7 != self.FUTEX_NR:
+            return None
+        op = self.t.reg_read(cpu, 11) & 0xFF
+        if op not in self.FUTEX_WAKE_OPS:
+            return None
+        va = self.t.reg_read(cpu, 10)
+        if not self.hfutex.lookup(cpu, va):
+            return None
+        # local handling: a0 = 0 (nobody woken), resume at epc + 4
+        self.t.reg_write(cpu, 10, 0)
+        self.t.clear_pending(cpu)
+        cycles = 16  # reg peeks + FSM, controller-local
+        self.stats.controller_cycles += cycles
+        done = at + (cycles if self.channel.enabled else 0)
+        self.t.redirect(cpu, epc + 4, resume_tick=done)
+        return done

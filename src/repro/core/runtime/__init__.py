@@ -1,0 +1,1 @@
+from .runtime import FaseRuntime, Report, TargetCrash, Deadlock  # noqa: F401

@@ -1,0 +1,346 @@
+"""FASE host runtime (paper §V): the exception loop of Fig 6.
+
+After reset every core is parked in privileged mode.  Execution starts with
+a Redirect into user mode; the runtime then blocks on the exception queue
+(``Next``), dispatches syscalls / page faults, applies state updates
+through HTP, and re-Redirects.  Two timing modes share all functional
+code:
+
+  * ``mode="fase"``   — every HTP request serialises through the UART
+    channel model and each handled exception charges host-runtime latency;
+    the trapped core's ``stall_until`` is the completion tick (StopFetch
+    until Redirect, §III).
+  * ``mode="oracle"`` — the full-system reference ("LiteX" role): no
+    channel, instead an in-kernel cost model per syscall (KERNEL_COST).
+
+The relative GAPBS-score / user-CPU-time error between the two modes is
+exactly the paper's accuracy metric (§VI-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .. import channel as chmod
+from ..controller import FaseController
+from ..hfutex import HFutexCache
+from ..target.cpu import CLOCK_HZ
+from . import loader as loader_mod
+from . import syscalls as sysmod
+from .io import AsyncHostIO, FdTable
+from .sched import Scheduler
+from .vm import PageAllocator, SegFault, VirtualMemory
+
+
+class TargetCrash(Exception):
+    pass
+
+
+class Deadlock(Exception):
+    pass
+
+
+@dataclass
+class Report:
+    ticks: int = 0
+    uticks: list = field(default_factory=list)
+    instret: list = field(default_factory=list)
+    stdout: bytes = b""
+    syscalls: dict = field(default_factory=dict)
+    traffic: dict = field(default_factory=dict)
+    traffic_total: int = 0
+    stall: dict = field(default_factory=dict)
+    sched: dict = field(default_factory=dict)
+    vm: dict = field(default_factory=dict)
+    hfutex: dict = field(default_factory=dict)
+    load_ticks: int = 0
+    exit_code: int = 0
+
+    @property
+    def seconds(self):
+        """Modelled target wall-time at 100 MHz."""
+        return self.ticks / CLOCK_HZ
+
+    @property
+    def user_seconds(self):
+        return sum(self.uticks) / CLOCK_HZ
+
+
+class FaseRuntime:
+    def __init__(self, target, mode: str = "fase", baud: int = 921600,
+                 hfutex: bool = True, direct_mode: bool = False,
+                 host_base_us: float = 35.0, host_us_per_req: float = 12.0,
+                 fault_preload: int = 16):
+        assert mode in ("fase", "oracle")
+        self.target = target
+        self.mode = mode
+        ch = chmod.UartChannel(baud=baud, enabled=(mode == "fase"))
+        hf = HFutexCache(target.n_cores, enabled=hfutex)
+        self.ctl = FaseController(target, ch, hf, direct_mode=direct_mode)
+        self.alloc = PageAllocator(target.mem_bytes)
+        self.vm = VirtualMemory(self.ctl, self.alloc,
+                                fault_preload=fault_preload)
+        self.fdt = FdTable()
+        self.async_io = AsyncHostIO(self.fdt)
+        self.sched = Scheduler(target.n_cores)
+        self.host_base_us = host_base_us
+        self.host_us_per_req = host_us_per_req
+        self.ticks_per_us = CLOCK_HZ // 1_000_000
+        self.prng_state = 0x9E3779B97F4A7C15
+        self.load_ticks = 0
+        self.sigreturn_va = 0
+        self.stats = {"syscalls": {}, "futex_waits": 0, "futex_wakes": 0,
+                      "futex_wakes_empty": 0, "runtime_ticks": 0,
+                      "kernel_ticks": 0, "exceptions": 0, "hfutex_hits": 0,
+                      "page_fault_exceptions": 0}
+        self.exit_code = 0
+
+    # ------------------------------------------------------------------
+    def load(self, image, argv: list[str], stdin: bytes = b"",
+             files: dict[str, bytes] | None = None):
+        for name, data in (files or {}).items():
+            self.fdt.add_file(name, data)
+        self.fdt.stdin += stdin
+        self.sigreturn_va = image.symbols.get("__fase_sigreturn", 0)
+        entry, sp, t = loader_mod.load_image(self, image, argv)
+        regs = [0] * 32
+        regs[2] = sp
+        th = self.sched.new_thread(regs, entry)
+        th.ready_at = t
+        return th
+
+    # ---------------- timing helpers -----------------------------------
+    def tick_ns(self, t: int) -> int:
+        return t * (1_000_000_000 // CLOCK_HZ)
+
+    def _total_requests(self) -> int:
+        return sum(self.ctl.stats.requests.values())
+
+    def charge(self, t: int, args, kcost_key: str, extra_kcost: int) -> int:
+        """Charge host-runtime latency (fase) or kernel cost (oracle)."""
+        if self.mode == "oracle":
+            kc = sysmod.KERNEL_COST.get(kcost_key,
+                                        sysmod.KERNEL_COST["default"])
+            kc = int(kc + extra_kcost)
+            self.stats["kernel_ticks"] += kc
+            return t + kc
+        n_req = self._total_requests() - getattr(args, "req0", 0)
+        args.req0 = self._total_requests()
+        host = int((self.host_base_us + self.host_us_per_req * n_req) *
+                   self.ticks_per_us)
+        self.stats["runtime_ticks"] += host
+        return t + host
+
+    # ---------------- context management --------------------------------
+    def save_context(self, cpu: int, thread, pc: int, t: int,
+                     keep_running: bool = False) -> int:
+        regs = [0] * 32
+        for i in range(1, 32):
+            t, regs[i] = self.ctl.reg_read(cpu, i, t, "ctxsw")
+        thread.regs = regs
+        thread.pc = pc
+        return t
+
+    def switch_in(self, cpu: int, thread, t: int) -> int:
+        if self.ctl.hfutex.clear_core(cpu):
+            t = self.ctl.hfutex_update(cpu, t)
+        if thread.wake_value is not None:
+            thread.regs[10] = thread.wake_value & ((1 << 64) - 1)
+            thread.wake_value = None
+        if thread.pending_signals and thread.saved_sigctx is None:
+            self._setup_signal_frame(thread)
+        for i in range(1, 32):
+            t = self.ctl.reg_write(cpu, i, thread.regs[i], t, "ctxsw")
+        if self.mode == "oracle":
+            kc = sysmod.KERNEL_COST["ctx_switch"]
+            self.stats["kernel_ticks"] += kc
+            t += kc
+        t = self.ctl.redirect(cpu, thread.pc, t, "ctxsw")
+        self.sched.assign(cpu, thread.tid)
+        self.sched.ctx_switches += 1
+        return t
+
+    def _setup_signal_frame(self, thread):
+        signum = thread.pending_signals.popleft()
+        handler = self.sched.sigactions.get(signum)
+        if not handler or not self.sigreturn_va:
+            return
+        thread.saved_sigctx = (tuple(thread.regs), thread.pc)
+        thread.regs = list(thread.regs)
+        thread.regs[10] = signum
+        thread.regs[1] = self.sigreturn_va    # ra -> sigreturn stub
+        thread.regs[2] -= 512                 # red zone
+        thread.pc = handler
+
+    def resume(self, cpu: int, thread, pc: int, t: int):
+        """Resume the running thread at ``pc`` (signals intercept here)."""
+        if thread.pending_signals and thread.saved_sigctx is None and \
+                any(s in self.sched.sigactions
+                    for s in thread.pending_signals):
+            t = self.save_context(cpu, thread, pc, t)
+            self._setup_signal_frame(thread)
+            for i in range(1, 32):
+                t = self.ctl.reg_write(cpu, i, thread.regs[i], t, "signal")
+            t = self.ctl.redirect(cpu, thread.pc, t, "signal")
+            return
+        self.ctl.redirect(cpu, pc, t, "redirect")
+
+    def schedule_onto(self, cpu: int, t: int):
+        tid = self.sched.pick_next()
+        if tid is None:
+            return     # core stays parked (StopFetch held)
+        th = self.sched.threads[tid]
+        self.switch_in(cpu, th, max(t, th.ready_at))
+
+    def wake_threads(self, tids, t: int):
+        for tid in tids:
+            self.sched.threads[tid].ready_at = t
+
+    def thread_exit(self, cpu: int, thread, t: int):
+        self.sched.exit_current(cpu)
+        if thread.clear_child_tid:
+            t = self.vm.ensure_mapped(thread.clear_child_tid, 4, cpu, t,
+                                      want_write=True)
+            pa = self.vm.translate(thread.clear_child_tid)
+            old = self.ctl.t.mem_read_word(pa & ~7)
+            shift = (pa & 4) * 8
+            new = (old & ~(0xFFFFFFFF << shift))
+            t = self.ctl.mem_write(cpu, pa & ~7, new, t, "exit")
+            woken = self.sched.futex_wake(pa & ~3, 1 << 30)
+            self.wake_threads(woken, t)
+        self.schedule_onto(cpu, t)
+
+    def block_on_host_read(self, cpu: int, thread, epc: int, args, fd: int,
+                           buf: int, count: int):
+        t = self.charge(args.t, args, "read", 0)
+        t = self.save_context(cpu, thread, epc + 4, t)
+        self.sched.block_current(cpu, "hostread")
+        rt = self
+
+        def cb(tid, data):
+            now = rt.target.get_ticks()
+            rt.vm.write_bytes(buf, data, 0, now, "read")
+            th = rt.sched.threads[tid]
+            th.wake_value = len(data)
+            rt.sched.make_ready(tid)
+            th.ready_at = now
+
+        self.async_io.submit_read(thread.tid, fd, count, cb)
+        self.schedule_onto(cpu, t)
+
+    # ---------------- exception loop ------------------------------------
+    def _dispatch_ready(self, now: int):
+        for cpu in range(self.target.n_cores):
+            if cpu in self.sched.running:
+                continue
+            if self.target.get_priv(cpu) != 3:
+                continue
+            tid = self.sched.pick_next()
+            if tid is None:
+                return
+            th = self.sched.threads[tid]
+            self.switch_in(cpu, th, max(now, th.ready_at,
+                                        self.ctl.channel.busy_until))
+
+    def _handle_exception(self, cpu: int, now: int):
+        self.stats["exceptions"] += 1
+        thread = self.sched.current(cpu)
+        if thread is None:
+            # spurious trap on an unowned core (e.g. after exit)
+            self.target.clear_pending(cpu)
+            self.target.park(cpu)
+            return
+        # controller-internal peek for the HFutex fast path (§V-B)
+        cause = self.target.csr_read(cpu, "mcause")
+        epc = self.target.csr_read(cpu, "mepc")
+        done = self.ctl.try_hfutex_fast_path(cpu, cause, epc, now)
+        if done is not None:
+            self.stats["hfutex_hits"] += 1
+            return
+        t, cause, epc, tval = self.ctl.next_info(cpu, now)
+        if cpu in self.vm.pending_flush:
+            t = self.ctl.flush_tlb(cpu, t, "shootdown")
+            self.vm.pending_flush.discard(cpu)
+        if cause == 8:        # ecall from U
+            sysmod.dispatch(self, cpu, thread, epc, t)
+            return
+        if cause in (12, 13, 15):
+            self.stats["page_fault_exceptions"] += 1
+            access = {12: "x", 13: "r", 15: "w"}[cause]
+            pages_before = self.vm.stats["pages_mapped"]
+            try:
+                t2 = self.vm.handle_fault(tval, access, cpu, t)
+            except SegFault as e:
+                raise TargetCrash(
+                    f"cpu{cpu} tid{thread.tid}: {e} pc={epc:#x}") from None
+            if self.mode == "oracle":
+                npages = self.vm.stats["pages_mapped"] - pages_before
+                kc = sysmod.KERNEL_COST["page_fault"] + \
+                    sysmod.KERNEL_COST["page_fault_per_page"] * max(npages, 1)
+                self.stats["kernel_ticks"] += kc
+                t2 = t + kc
+            else:
+                n_req = 0
+                host = int((self.host_base_us +
+                            self.host_us_per_req * 2) * self.ticks_per_us)
+                self.stats["runtime_ticks"] += host
+                t2 += host
+            self.ctl.redirect(cpu, epc, t2, "pagefault")
+            return
+        raise TargetCrash(f"cpu{cpu} tid{thread.tid}: cause={cause} "
+                          f"epc={epc:#x} tval={tval:#x}")
+
+    def run(self, max_ticks: int = 1 << 48,
+            max_exceptions: int = 1 << 30) -> Report:
+        while self.sched.live_threads() > 0:
+            self.async_io.poll()
+            self._dispatch_ready(self.target.get_ticks())
+            if not self.sched.running:
+                if self.async_io.busy or any(
+                        th.state == "ready"
+                        for th in self.sched.threads.values()):
+                    continue
+                raise Deadlock(
+                    f"no runnable threads; futex queues: "
+                    f"{ {k: list(v) for k, v in self.sched.futex_q.items()} }")
+            self.target.run()
+            now = self.target.get_ticks()
+            if now > max_ticks:
+                raise TimeoutError(f"exceeded {max_ticks} target ticks")
+            if self.stats["exceptions"] > max_exceptions:
+                raise TimeoutError("exception budget exceeded")
+            for cpu in self.target.pending_cores():
+                self._handle_exception(cpu, now)
+        return self.finish()
+
+    def finish(self) -> Report:
+        t = self.ctl.channel.busy_until
+        t, ticks = self.ctl.tick(t)
+        uticks = []
+        for c in range(self.target.n_cores):
+            t, u = self.ctl.utick(c, t)
+            uticks.append(u)
+        rep = Report(
+            ticks=self.target.get_ticks(),
+            uticks=uticks,
+            instret=[self.target.get_instret(c)
+                     for c in range(self.target.n_cores)],
+            stdout=bytes(self.fdt.stdout),
+            syscalls=dict(self.stats["syscalls"]),
+            traffic=dict(self.ctl.channel.bytes_by_cat),
+            traffic_total=self.ctl.channel.total_bytes,
+            stall={"controller_cycles": self.ctl.stats.controller_cycles,
+                   "uart_ticks": self.ctl.stats.uart_ticks,
+                   "runtime_ticks": self.stats["runtime_ticks"],
+                   "kernel_ticks": self.stats["kernel_ticks"]},
+            sched={"ctx_switches": self.sched.ctx_switches,
+                   "exceptions": self.stats["exceptions"],
+                   "futex_waits": self.stats["futex_waits"],
+                   "futex_wakes": self.stats["futex_wakes"],
+                   "futex_wakes_empty": self.stats["futex_wakes_empty"]},
+            vm=dict(self.vm.stats),
+            hfutex={"hits": self.stats["hfutex_hits"],
+                    "inserts": self.ctl.hfutex.inserts},
+            load_ticks=self.load_ticks,
+            exit_code=self.exit_code,
+        )
+        return rep

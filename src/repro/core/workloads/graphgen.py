@@ -1,0 +1,46 @@
+"""Deterministic R-MAT-style graph generator (GAPBS uses Kronecker graphs
+with 2^k vertices; we generate a scaled-down equivalent host-side and ship
+it to the target as a file through the I/O bypass)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rmat(scale: int, avg_degree: int = 8, seed: int = 42,
+         weights: bool = False) -> bytes:
+    n = 1 << scale
+    m_dir = n * avg_degree // 2
+    rng = np.random.default_rng(seed)
+    a, b, c = 0.57, 0.19, 0.19
+    src = np.zeros(m_dir, dtype=np.int64)
+    dst = np.zeros(m_dir, dtype=np.int64)
+    for bit in range(scale):
+        r1 = rng.random(m_dir)
+        r2 = rng.random(m_dir)
+        go_right = r1 > (a + b)
+        # quadrant probabilities
+        right_top = r2 < c / (c + (1 - a - b - c))
+        top = np.where(go_right, right_top, r2 < a / (a + b))
+        src |= (go_right.astype(np.int64) << bit)
+        dst |= ((~top).astype(np.int64) << bit)
+    # symmetrise, dedup, drop self loops
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    eid = u * n + v
+    eid = np.unique(eid)
+    u, v = eid // n, eid % n
+    m = len(u)
+    order = np.argsort(u * n + v, kind="stable")
+    u, v = u[order], v[order]
+    rowptr = np.zeros(n + 1, dtype=np.uint64)
+    np.add.at(rowptr, u + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.uint64)
+    colidx = v.astype(np.uint64)
+    header = np.array([n, m, 1 if weights else 0], dtype=np.uint64)
+    parts = [header.tobytes(), rowptr.tobytes(), colidx.tobytes()]
+    if weights:
+        w = (rng.integers(1, 16, size=m)).astype(np.uint64)
+        parts.append(w.tobytes())
+    return b"".join(parts)

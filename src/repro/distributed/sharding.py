@@ -1,0 +1,149 @@
+"""Sharding rules: FSDP over "data" (+"pod") composed with tensor/expert
+parallelism over "model".
+
+Training params: weights shard their contraction dim over "data" (FSDP —
+all-gathered per layer by XLA SPMD) and their parallel dim over "model"
+(heads / ffn columns / experts).  Serving can request TP-only specs
+(``fsdp=False``) so decode avoids per-step parameter all-gathers.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+def dp_axis(mesh) -> tuple:
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def dp_size(mesh) -> int:
+    import numpy as _np
+    return int(_np.prod([mesh.shape[a] for a in dp_axis(mesh)]))
+
+
+def dp_for(mesh, n: int):
+    """Batch axes smaller than the dp extent stay replicated."""
+    return dp_axis(mesh) if n % dp_size(mesh) == 0 else None
+
+
+def _sub_specs(name: str, cfg: ModelConfig, dp, fsdp: bool):
+    d = dp if fsdp else None
+    if name == "attn":
+        s = {"wq": P(None, d, "model"), "wk": P(None, d, "model"),
+             "wv": P(None, d, "model"), "wo": P(None, "model", d),
+             "norm": P(None, None)}
+        if cfg.qk_norm:
+            s["q_norm"] = P(None, None)
+            s["k_norm"] = P(None, None)
+        return s
+    if name == "mlp":
+        return {"w_gate": P(None, d, "model"), "w_in": P(None, d, "model"),
+                "w_out": P(None, "model", d), "norm": P(None, None)}
+    if name == "moe":
+        return {"router": P(None, d, None),
+                "w_gate": P(None, "model", d, None),
+                "w_in": P(None, "model", d, None),
+                "w_out": P(None, "model", None, d),
+                "norm": P(None, None)}
+    if name == "mamba":
+        return {"w_in": P(None, d, "model"),
+                "conv_w": P(None, None, "model"),
+                "w_dt": P(None, "model", None),
+                "dt_bias": P(None, "model"),
+                "w_B": P(None, "model", None), "w_C": P(None, "model", None),
+                "A_log": P(None, "model", None),
+                "d_skip": P(None, "model"),
+                "w_out": P(None, "model", d), "norm": P(None, None)}
+    if name == "mlstm":
+        return {"wq": P(None, d, "model"), "wk": P(None, d, "model"),
+                "wv": P(None, d, "model"), "wf": P(None, d, None),
+                "wi": P(None, d, None), "wo": P(None, "model", d),
+                "out_norm": P(None, None), "norm": P(None, None)}
+    if name == "slstm":
+        return {"w_z": P(None, d, "model"), "w_f": P(None, d, "model"),
+                "w_i": P(None, d, "model"), "w_o": P(None, d, "model"),
+                "r": P(None, None, None),
+                "w_out": P(None, "model", d), "norm": P(None, None)}
+    raise ValueError(name)
+
+
+def param_specs(cfg: ModelConfig, mesh, fsdp: bool = True,
+                policy: str = "fsdp_tp"):
+    """policy: 'fsdp_tp' (default), 'tp_only' (== fsdp=False), or
+    'dp_only' (replicate weights; no tensor parallelism — small models
+    where TP collectives dwarf compute, see §Perf hillclimb B)."""
+    from ..models.core import period_layout
+    if policy == "tp_only":
+        fsdp = False
+    layout = period_layout(cfg)
+    if policy == "dp_only":
+        def rep(spec_dict):
+            return {k: P(*([None] * len(v))) for k, v in spec_dict.items()}
+        dp = dp_axis(mesh)
+        specs = {
+            "embed": P(None, None),
+            "blocks": [rep(_sub_specs(n, cfg, dp, True)) for n in layout],
+            "final_norm": P(None),
+        }
+        if not cfg.tied_embeddings:
+            specs["lm_head"] = P(None, None)
+        return specs
+    dp = dp_axis(mesh)
+    d = dp if fsdp else None
+    specs = {
+        "embed": P("model", d),
+        "blocks": [ _sub_specs(n, cfg, dp, fsdp) for n in layout ],
+        "final_norm": P(None),
+    }
+    if not cfg.tied_embeddings:
+        specs["lm_head"] = P(d, "model")
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh, with_prefix: bool = False,
+                policy: str = "fsdp_tp"):
+    dp = dp_axis(mesh)
+    if policy == "dp_only":
+        dp = tuple(dp) + ("model",)       # pure DP over every axis
+    s = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if with_prefix:
+        s["prefix_embeds"] = P(dp, None, None)
+    return s
+
+
+def decode_state_specs(cfg: ModelConfig, mesh, state):
+    batch = state["seq_lens"].shape[0]
+    dp = dp_for(mesh, batch)
+    tp = int(mesh.shape["model"])
+
+    def mdl(n):    # shard over "model" only when divisible
+        return "model" if n % tp == 0 else None
+
+    specs = {"seq_lens": P(dp), "block_tables": P(dp, None)}
+    if "kpool" in state:
+        pages = state["kpool"].shape[3]
+        specs["kpool"] = P(None, None, dp, mdl(pages), None, None, None)
+        specs["vpool"] = P(None, None, dp, mdl(pages), None, None, None)
+    if "mamba_h" in state:
+        di = state["mamba_h"].shape[3]
+        specs["mamba_h"] = P(None, None, dp, mdl(di), None)
+        specs["mamba_conv"] = P(None, None, dp, None, mdl(di))
+    if "mlstm_C" in state:
+        specs["mlstm_C"] = P(None, None, dp, None, None, None)
+    if "slstm_h" in state:
+        specs["slstm_h"] = P(None, None, dp, None)
+        specs["slstm_c"] = P(None, None, dp, None)
+    return specs
+
+
+def tokens_spec(mesh, n: int = 0):
+    return P(dp_for(mesh, n) if n else dp_axis(mesh))
+
+
+def make_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

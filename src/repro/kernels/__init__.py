@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper with shape plumbing) and ref.py (pure-jnp oracle).
+On this CPU container they are validated in interpret=True mode; the
+dry-run/roofline path lowers the jnp reference (identical math) because the
+Mosaic TPU backend is unavailable on the CPU host platform.
+"""

@@ -1,0 +1,86 @@
+"""Flash attention (training/prefill) as a Pallas TPU kernel.
+
+Grid (batch*heads, n_q_blocks, n_kv_blocks); the kv-block axis is the
+innermost sequential grid dimension, so the online-softmax state (m, l)
+and the output accumulator live in VMEM scratch carried across kv blocks —
+the canonical TPU flash pattern.  Block shapes are MXU-aligned (the 128
+defaults put the contraction on full lanes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale, causal, bq, bk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                # (bk, d)
+    s = q @ k.T                                     # (bq, bk)
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fini():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                    interpret=False):
+    """q/k/v (BH, S, D) -> (BH, S, D).  GQA handled by the ops wrapper."""
+    BH, S, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    nq = pl.cdiv(S, bq)
+    nk = pl.cdiv(S, bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: GQA-aware flash attention over (B,S,H,D) activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+def flash_mha(q, k, v, causal=True, interpret=False):
+    """q (B,S,H,D), k/v (B,S,Hkv,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    o = flash_attention(fold(q), fold(kr), fold(vr), causal=causal,
+                        interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)

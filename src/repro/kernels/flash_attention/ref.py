@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash attention."""
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

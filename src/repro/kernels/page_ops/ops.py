@@ -1,0 +1,29 @@
+"""Jit'd wrappers choosing the Pallas kernel on TPU, jnp reference on CPU."""
+from __future__ import annotations
+
+import jax
+
+from . import page_ops as K
+from . import ref as R
+
+
+def _use_kernel(interpret):
+    return interpret or jax.default_backend() == "tpu"
+
+
+def page_copy(pool, pairs, interpret=False):
+    if _use_kernel(interpret):
+        return K.page_copy(pool, pairs, interpret=interpret)
+    return R.page_copy_ref(pool, pairs)
+
+
+def page_set(pool, ids, value, interpret=False):
+    if _use_kernel(interpret):
+        return K.page_set(pool, ids, value, interpret=interpret)
+    return R.page_set_ref(pool, ids, value)
+
+
+def page_gather(pool, table, interpret=False):
+    if _use_kernel(interpret):
+        return K.page_gather(pool, table, interpret=interpret)
+    return R.page_gather_ref(pool, table)

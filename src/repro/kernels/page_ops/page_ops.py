@@ -1,0 +1,99 @@
+"""HTP page operations (PageS / PageCP / PageR gather) on the TPU pool.
+
+The FASE controller's page-level data access, re-tiled for HBM->VMEM DMA:
+each grid step moves exactly one 4KB-class page; source/destination ids
+arrive as scalar-prefetch operands so the BlockSpec index_map performs the
+block-table indirection (the same mechanism serving uses for COW prefix
+forks and page reclamation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(pairs_ref, pool_ref, out_ref):
+    out_ref[0] = pool_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_copy(pool, pairs, interpret=False):
+    """pool (NP, page, H, D); pairs (K, 2) int32 [src, dst] -> new pool.
+
+    Gather+scatter through a one-page VMEM staging block per grid step."""
+    NP, page, H, D = pool.shape
+    K = pairs.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, page, H, D),
+                               lambda k, pairs: (pairs[k, 0], 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, H, D),
+                               lambda k, pairs: (pairs[k, 1], 0, 0, 0)),
+    )
+    copied = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(pairs, pool)
+    return copied
+
+
+def _set_kernel(ids_ref, val_ref, pool_ref, out_ref):
+    del pool_ref  # aliased output; never read
+    out_ref[0] = jnp.broadcast_to(val_ref[0, 0, 0, 0], out_ref.shape[1:]
+                                  ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_set(pool, ids, value, interpret=False):
+    """Set pages ``ids`` (K,) to a scalar value (PageS; lazy-zero pages)."""
+    NP, page, H, D = pool.shape
+    K = ids.shape[0]
+    val = jnp.full((1, 1, 1, 1), value, pool.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, 1, 1, 1), lambda k, ids: (0, 0, 0, 0)),
+                  pl.BlockSpec((1, 1, 1, 1), lambda k, ids: (0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, H, D),
+                               lambda k, ids: (ids[k], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _set_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(ids, val, pool)
+
+
+def _gather_kernel(table_ref, pool_ref, out_ref):
+    out_ref[0] = pool_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool, table, interpret=False):
+    """Gather pages ``table`` (K,) into a dense (K, page, H, D) buffer
+    (PageR; the read path the paged-attention kernel fuses away)."""
+    NP, page, H, D = pool.shape
+    K = table.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, page, H, D),
+                               lambda k, t: (t[k], 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, H, D), lambda k, t: (k, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, page, H, D), pool.dtype),
+        interpret=interpret,
+    )(table, pool)

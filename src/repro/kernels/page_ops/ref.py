@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the page ops."""
+import jax.numpy as jnp
+
+
+def page_copy_ref(pool, pairs):
+    return pool.at[pairs[:, 1]].set(pool[pairs[:, 0]])
+
+
+def page_set_ref(pool, ids, value):
+    return pool.at[ids].set(jnp.asarray(value, pool.dtype))
+
+
+def page_gather_ref(pool, table):
+    return pool[table]

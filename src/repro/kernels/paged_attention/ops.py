@@ -1,0 +1,17 @@
+"""Jit'd wrapper selecting kernel vs reference (CPU lowers the reference)."""
+from __future__ import annotations
+
+import jax
+
+from .paged_attention import paged_attention
+from .ref import paged_attention_ref
+
+
+def paged_decode(q, kpool, vpool, block_table, seq_lens, use_kernel=None,
+                 interpret=False):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        return paged_attention(q, kpool, vpool, block_table, seq_lens,
+                               interpret=interpret)
+    return paged_attention_ref(q, kpool, vpool, block_table, seq_lens)

@@ -1,0 +1,94 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+The FASE page-level data access pattern (PageR/block tables) adapted to
+the TPU memory hierarchy: the KV cache lives in an HBM page pool; the
+block table is a scalar-prefetch operand so each grid step's BlockSpec
+index_map dereferences it to DMA exactly one page of K and V into VMEM.
+Online-softmax scratch carries across the page axis of the grid (TPU grids
+execute sequentially), masked by per-sequence lengths.
+
+Shapes:
+  q            (B, H, D)          one new token per sequence
+  kpool/vpool  (NP, page, Hkv, D) global page pool
+  block_table  (B, P) int32       page ids per sequence
+  seq_lens     (B,)   int32
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page, groups):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (H, D)
+    k = k_ref[0].astype(jnp.float32)            # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    H, D = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(Hkv, groups, D)
+    s = jnp.einsum("hgd,phd->hgp", qg, k) / math.sqrt(D)
+    pos = pi * page + jax.lax.broadcasted_iota(
+        jnp.int32, (Hkv, groups, page), 2)
+    s = jnp.where(pos < lens_ref[b], s, -1e30)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=2))  # (Hkv, groups)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + \
+        jnp.einsum("hgp,phd->hgd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _fini():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, kpool, vpool, block_table, seq_lens,
+                    interpret=False):
+    B, H, D = q.shape
+    NP, page, Hkv, _ = kpool.shape
+    P = block_table.shape[1]
+    groups = H // Hkv
+    kernel = functools.partial(_paged_kernel, page=page, groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, bt, lens: (b, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, p, bt, lens: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, p, bt, lens: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, bt, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, groups), jnp.float32),
+            pltpu.VMEM((Hkv, groups), jnp.float32),
+            pltpu.VMEM((Hkv, groups, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q, kpool, vpool)

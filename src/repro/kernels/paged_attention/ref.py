@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for paged decode attention."""
+import math
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kpool, vpool, block_table, seq_lens):
+    B, H, D = q.shape
+    NP, page, Hkv, _ = kpool.shape
+    P = block_table.shape[1]
+    G = H // Hkv
+    k = kpool[block_table].reshape(B, P * page, Hkv, D)   # (B,S,Hkv,D)
+    v = vpool[block_table].reshape(B, P * page, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    pos = jnp.arange(P * page)[None, None, None, :]
+    s = jnp.where(pos < seq_lens[:, None, None, None], s, -1e30)
+    p = jax.nn_softmax(s) if False else jnp.exp(
+        s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Serving launcher: `python -m repro.launch.serve --arch qwen3-8b --smoke`"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args(argv)
+    from ..configs import CONFIGS
+    from ..models import core as M
+    from ..serving.engine import Request, ServeEngine
+    cfg = CONFIGS[args.arch]
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = M.init_params(cfg, 0)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_seq=128)
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=[2 + i, 3, 4], max_new=args.max_new,
+                           eos=1))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s); kv={eng.kv.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Jittable step functions + abstract input specs for every execution mode.
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for all
+inputs of that cell — weak-type-correct, shardable, no device allocation —
+exactly what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import core as M
+from ..models.config import ModelConfig
+from ..training.optim import AdamWConfig, adamw_update, init_opt_state
+
+BF16, F32, I32 = jnp.bfloat16, jnp.float32, jnp.int32
+
+# assignment shape table (LM family)
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+PREFIX_LEN = 256   # modality-stub prefix positions ([vlm]/[audio])
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return False, "SKIP(full-attn)"
+    return True, ""
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig = AdamWConfig(),
+                    n_micro: int = 1, act_spec=None):
+    """Train step with optional gradient accumulation over microbatches
+    (keeps per-layer activation footprints bounded at large global batch)
+    and Megatron-style activation sequence sharding (``act_spec``)."""
+    def one_micro(params, batch):
+        return jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, act_spec=act_spec))(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = one_micro(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) +
+                                 x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_sum, gacc = carry
+                loss, g = one_micro(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_sum + loss, gacc), None
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), F32), gacc0), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt_state, gn = adamw_update(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, act_spec=None):
+    def prefill_step(params, batch):
+        logits, aux = M.forward(cfg, params, batch["tokens"],
+                                batch.get("prefix_embeds"),
+                                act_spec=act_spec)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, state, tokens):
+        return M.decode_step(cfg, params, state, tokens)
+    return serve_step
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, 0))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(init_opt_state, params)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(
+        lambda: M.make_decode_state(cfg, batch, seq))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for the cell's step-function inputs."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if sh["kind"] == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), I32),
+            "labels": jax.ShapeDtypeStruct((B, S), I32),
+        }
+        if cfg.frontend != "none":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, PREFIX_LEN, cfg.d_model), BF16)
+        return {"params": abstract_params(cfg),
+                "opt_state": abstract_opt_state(cfg),
+                "batch": batch}
+    if sh["kind"] == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), I32)}
+        if cfg.frontend != "none":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, PREFIX_LEN, cfg.d_model), BF16)
+        return {"params": abstract_params(cfg), "batch": batch}
+    # decode: one new token against a seq-long KV cache / state
+    return {"params": abstract_params(cfg),
+            "state": abstract_decode_state(cfg, B, S),
+            "tokens": jax.ShapeDtypeStruct((B,), I32)}

@@ -1,0 +1,29 @@
+"""End-to-end training launcher: `python -m repro.launch.train --arch ...`"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import CONFIGS
+from ..training.train_loop import train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+    cfg = CONFIGS[args.arch]
+    if args.smoke:
+        cfg = cfg.smoke()
+    losses = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                   ckpt_dir=args.ckpt)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .config import ModelConfig  # noqa: F401
+from . import core  # noqa: F401

@@ -1,0 +1,734 @@
+"""Model substrate: every assigned architecture as pure-JAX functions.
+
+Design rules (see DESIGN.md §5):
+  * parameters are plain pytrees, stacked over layers (or hybrid periods)
+    so the layer stack is a single ``lax.scan`` — keeps HLO size and
+    compile time flat in depth, which the 126-layer / 512-device dry-run
+    needs;
+  * attention is chunked with an online-softmax accumulator (the pure-JAX
+    twin of the Pallas flash kernel) so no S×S intermediate ever
+    materialises — 32k prefill lowers with bounded per-device buffers;
+  * MoE uses sort-based capacity dispatch into (E, C, d) expert buffers —
+    expert-parallel over the "model" mesh axis, tokens over "data";
+  * Mamba uses chunked associative scans, xLSTM uses chunked gated linear
+    attention (mLSTM) + a true recurrent scan (sLSTM);
+  * decode uses a paged KV cache (block tables into a page pool) — the
+    FASE page-level-access analogue — with a sliding-window path for the
+    hybrid arch so 500k-token contexts stay bounded.
+
+Everything takes explicit dtypes (bf16 compute / f32 accumulators) so the
+x64 mode enabled by :mod:`repro.core` never leaks in.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+Q_CHUNK = 512
+KV_CHUNK = 512
+SSM_CHUNK = 256
+PAGE_SIZE = 64          # tokens per KV page
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(F32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * w
+
+
+def rope(x, positions, theta):
+    """x (..., S, H, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) *
+                    jnp.arange(half, dtype=F32) / half)
+    ang = positions[..., :, None, None].astype(F32) * freqs  # (.., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _online_attn(q, k, v, q_pos, kv_pos, window):
+    """Chunked causal attention with online softmax.
+
+    q (B,Sq,Hkv,G,D), k/v (B,Skv,Hkv,D); *_pos absolute positions.
+    Scans kv chunks, carrying (m, l, acc) accumulators.
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    nkv = max(Skv // KV_CHUNK, 1)
+    ck = k.reshape(B, nkv, Skv // nkv, Hkv, D)
+    cv = v.reshape(B, nkv, Skv // nkv, Hkv, D)
+    cpos = kv_pos.reshape(B, nkv, Skv // nkv)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(F32) * scale,
+                       kc.astype(F32))
+        mask = pc[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window:
+            mask &= pc[:, None, None, None, :] > \
+                (q_pos[:, None, None, :, None] - window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(F32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -1e30, F32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), F32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), F32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (ck.swapaxes(0, 1), cv.swapaxes(0, 1), cpos.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # (B,Sq,Hkv,G,D)
+
+
+def attention(p, cfg: ModelConfig, x, positions, k_full=None, v_full=None,
+              kv_positions=None):
+    """Self-attention with GQA + RoPE (+ optional qk-norm, window).
+
+    If k_full/v_full given (decode), x provides only queries.
+    Returns (out, k_new, v_new)."""
+    B, S, d = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    qg = q.reshape(B, S, Hkv, G, D)
+    if k_full is None:
+        k_all, v_all, kv_pos = k, v, positions
+    else:
+        k_all, v_all, kv_pos = k_full, v_full, kv_positions
+    o = _online_attn(qg, k_all, v_all, positions, kv_pos,
+                     cfg.sliding_window)
+    o = o.reshape(B, S, H * D)
+    return o @ p["wo"], k, v
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+
+
+def moe(p, cfg: ModelConfig, x2d):
+    """Sort-based capacity-dispatch MoE.  x2d (T, d) -> (T, d), aux loss."""
+    T, d = x2d.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x2d.astype(F32)) @ p["router"].astype(F32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = lax.top_k(probs, K)                      # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # aux load-balance loss (Switch)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), F32).at[idx.reshape(-1)].add(
+        jnp.ones((T * K,), F32)) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    C = int(cfg.capacity_factor * T * K / E) + 1
+    e_flat = idx.reshape(-1)                                  # (T*K,)
+    tok_flat = jnp.repeat(jnp.arange(T, dtype=I32), K)
+    g_flat = gate_vals.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, tok_s, g_s = e_flat[order], tok_flat[order], g_flat[order]
+    start = jnp.searchsorted(e_s, jnp.arange(E, dtype=e_s.dtype))
+    pos = jnp.arange(T * K, dtype=I32) - start[e_s].astype(I32)
+    keep = pos < C
+    posc = jnp.where(keep, pos, C - 1)
+    buf = jnp.zeros((E, C, d), x2d.dtype)
+    buf = buf.at[e_s, posc].add(x2d[tok_s] *
+                                keep[:, None].astype(x2d.dtype))
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h2 = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    hh = jax.nn.silu(h) * h2
+    out_buf = jnp.einsum("ecf,efd->ecd", hh, p["w_out"])
+    contrib = out_buf[e_s, posc] * (g_s * keep.astype(F32)
+                                    )[:, None].astype(x2d.dtype)
+    y = jnp.zeros((T, d), x2d.dtype).at[tok_s].add(contrib)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (chunked selective scan)
+# ---------------------------------------------------------------------------
+def mamba(p, cfg: ModelConfig, x, state=None):
+    """x (B,S,d).  state (h (B,di,N), conv (B,di,W-1)) for decode.
+    Returns (out, new_state)."""
+    B, S, d = x.shape
+    di, N, W = cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    xz = x @ p["w_in"]                       # (B,S,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv1d
+    if state is None:
+        pad = jnp.zeros((B, W - 1, di), xi.dtype)
+        conv_tail = None
+    else:
+        pad = state[1]
+        conv_tail = None
+    xc = jnp.concatenate([pad, xi], axis=1)
+    new_conv = xc[:, -(W - 1):, :]
+    kern = p["conv_w"]                       # (W, di)
+    xi = sum(xc[:, w:w + S, :] * kern[w] for w in range(W))
+    xi = jax.nn.silu(xi)
+    dt = jax.nn.softplus(xi @ p["w_dt"] + p["dt_bias"])       # (B,S,di)
+    Bm = xi @ p["w_B"]                                        # (B,S,N)
+    Cm = xi @ p["w_C"]                                        # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(F32))                      # (di,N)
+    decay = jnp.exp(dt.astype(F32)[..., None] * A)            # (B,S,di,N)
+    drive = (dt.astype(F32) * xi.astype(F32))[..., None] * \
+        Bm.astype(F32)[:, :, None, :]                         # (B,S,di,N)
+
+    nchunk = max(S // SSM_CHUNK, 1)
+    decay_c = decay.reshape(B, nchunk, S // nchunk, di, N)
+    drive_c = drive.reshape(B, nchunk, S // nchunk, di, N)
+    C_c = Cm.reshape(B, nchunk, S // nchunk, N)
+
+    def chunk_body(h, inp):
+        dec, drv, cc = inp                   # (B,c,di,N), (B,c,N)
+        def assoc(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+        cdec, cdrv = lax.associative_scan(assoc, (dec, drv), axis=1)
+        h_all = cdec * h[:, None] + cdrv     # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cc.astype(F32))
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), F32) if state is None else \
+        state[0].astype(F32)
+    hT, ys = lax.scan(chunk_body, h0,
+                      (decay_c.swapaxes(0, 1), drive_c.swapaxes(0, 1),
+                       C_c.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y + xi * p["d_skip"]
+    out = (y * jax.nn.silu(z)) @ p["w_out"]
+    return out, (hT.astype(F32), new_conv)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunked gated linear attention) + sLSTM (true recurrence)
+# ---------------------------------------------------------------------------
+def mlstm(p, cfg: ModelConfig, x, state=None):
+    B, S, d = x.shape
+    H, D = cfg.n_heads, cfg.d_model // cfg.n_heads
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, H, D) / math.sqrt(D)
+    v = (x @ p["wv"]).reshape(B, S, H, D)
+    f = jax.nn.sigmoid((x @ p["wf"]).reshape(B, S, H).astype(F32))
+    i = jnp.exp(-jax.nn.softplus(-(x @ p["wi"]).reshape(B, S, H)
+                                 .astype(F32)))
+
+    nchunk = max(S // SSM_CHUNK, 1)
+    c = S // nchunk
+    qc = q.reshape(B, nchunk, c, H, D)
+    kc = k.reshape(B, nchunk, c, H, D)
+    vc = v.reshape(B, nchunk, c, H, D)
+    fc = f.reshape(B, nchunk, c, H)
+    ic = i.reshape(B, nchunk, c, H)
+
+    def chunk_body(C, inp):
+        qj, kj, vj, fj, ij = inp
+        logf = jnp.log(jnp.maximum(fj, 1e-9))                 # (B,c,H)
+        cum = jnp.cumsum(logf, axis=1)
+        total = cum[:, -1:]
+        # intra-chunk causal gated attention; pairwise log-decay
+        # exp(cum_i - cum_j) for i >= j stays in [0, 1] (numerically safe)
+        cum_h = cum.transpose(0, 2, 1)                        # (B,H,c)
+        dec = jnp.exp(jnp.minimum(
+            cum_h[:, :, :, None] - cum_h[:, :, None, :], 0.0))
+        w = dec * ij.transpose(0, 2, 1)[:, :, None, :]        # * i_j
+        s = jnp.einsum("bqhd,bkhd->bhqk", qj.astype(F32),
+                       kj.astype(F32)) * w
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        s = jnp.where(mask[None, None], s, 0.0)
+        intra = jnp.einsum("bhqk,bkhd->bqhd", s, vj.astype(F32))
+        # inter-chunk: q_t * decay(0..t) @ C   (exp(cum) <= 1)
+        inter = jnp.einsum("bqhd,bhde->bqhe",
+                           qj.astype(F32) * jnp.exp(cum)[..., None], C)
+        # state update
+        wk = ij * jnp.exp(total - cum)                        # decay t..end
+        C = C * jnp.exp(total)[:, 0, :, None, None] + \
+            jnp.einsum("bkhd,bkhe->bhde", kj.astype(F32) * wk[..., None],
+                       vj.astype(F32))
+        return C, intra + inter
+
+    C0 = jnp.zeros((B, H, D, D), F32) if state is None else \
+        state.astype(F32)
+    CT, ys = lax.scan(chunk_body, C0,
+                      (qc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                       vc.swapaxes(0, 1), fc.swapaxes(0, 1),
+                       ic.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, S, H * D).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["wo"], CT
+
+
+def slstm(p, cfg: ModelConfig, x, state=None):
+    """Scalar-memory LSTM with recurrent mixing (per-step scan)."""
+    B, S, d = x.shape
+    zi = x @ p["w_z"]
+    fi = x @ p["w_f"]
+    ii = x @ p["w_i"]
+    oi = x @ p["w_o"]
+
+    def step(carry, inp):
+        h, c = carry
+        z_t, f_t, i_t, o_t = inp
+        rec = h @ p["r"]                                     # (B,d)
+        f = jax.nn.sigmoid(f_t.astype(F32) + rec)
+        i = jax.nn.sigmoid(i_t.astype(F32) + rec)
+        z = jnp.tanh(z_t.astype(F32) + rec)
+        o = jax.nn.sigmoid(o_t.astype(F32) + rec)
+        c = f * c + i * z
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    if state is None:
+        h0 = jnp.zeros((B, d), F32)
+        c0 = jnp.zeros((B, d), F32)
+    else:
+        h0, c0 = state
+    (hT, cT), hs = lax.scan(step, (h0, c0),
+                            (zi.swapaxes(0, 1), fi.swapaxes(0, 1),
+                             ii.swapaxes(0, 1), oi.swapaxes(0, 1)))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    return y @ p["w_out"], (hT, cT)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (stacked over layers / periods for lax.scan)
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale or (1.0 / math.sqrt(fan_in))
+    return (jax.random.normal(key, shape, F32) * scale).astype(BF16)
+
+
+def _attn_params(key, cfg: ModelConfig):
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, H * D)),
+        "wk": _dense_init(ks[1], (d, Hkv * D)),
+        "wv": _dense_init(ks[2], (d, Hkv * D)),
+        "wo": _dense_init(ks[3], (H * D, d)),
+        "norm": jnp.ones((d,), BF16),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((D,), BF16)
+        p["k_norm"] = jnp.ones((D,), BF16)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, ff)),
+        "w_in": _dense_init(ks[1], (d, ff)),
+        "w_out": _dense_init(ks[2], (ff, d)),
+        "norm": jnp.ones((d,), BF16),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, E), scale=0.02),
+        "w_gate": _dense_init(ks[1], (E, d, ff)),
+        "w_in": _dense_init(ks[2], (E, d, ff)),
+        "w_out": _dense_init(ks[3], (E, ff, d)),
+        "norm": jnp.ones((d,), BF16),
+    }
+
+
+def _mamba_params(key, cfg: ModelConfig):
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di)),
+        "conv_w": (jax.random.normal(ks[1], (W, di), F32) * 0.2
+                   ).astype(BF16),
+        "w_dt": _dense_init(ks[2], (di, di), scale=0.01),
+        "dt_bias": jnp.zeros((di,), BF16),
+        "w_B": _dense_init(ks[3], (di, N)),
+        "w_C": _dense_init(ks[4], (di, N)),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=F32) / 2.0
+                         )[None, :].repeat(di, 0),
+        "d_skip": jnp.ones((di,), BF16),
+        "w_out": _dense_init(ks[5], (di, d)),
+        "norm": jnp.ones((d,), BF16),
+    }
+
+
+def _mlstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (d, d)),
+        "wk": _dense_init(ks[1], (d, d)),
+        "wv": _dense_init(ks[2], (d, d)),
+        "wf": _dense_init(ks[3], (d, cfg.n_heads), scale=0.02),
+        "wi": _dense_init(ks[4], (d, cfg.n_heads), scale=0.02),
+        "wo": _dense_init(ks[5], (d, d)),
+        "out_norm": jnp.ones((d,), BF16),
+        "norm": jnp.ones((d,), BF16),
+    }
+
+
+def _slstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": _dense_init(ks[0], (d, d)),
+        "w_f": _dense_init(ks[1], (d, d)),
+        "w_i": _dense_init(ks[2], (d, d)),
+        "w_o": _dense_init(ks[3], (d, d)),
+        "r": _dense_init(ks[4], (d, d), scale=0.02).astype(F32),
+        "w_out": _dense_init(ks[5], (d, d)),
+        "norm": jnp.ones((d,), BF16),
+    }
+
+
+def period_layout(cfg: ModelConfig) -> list[str]:
+    """Sub-layer layout of one scan step.
+
+    dense:  ["attn", "mlp"] x 1 layer per step
+    moe:    ["attn", "moe"]
+    hybrid: per period: attn at pos 0 else mamba; mlp or moe after each
+    ssm:    ["mlstm", "mlp"] / ["slstm", "mlp"] alternating
+    """
+    if cfg.arch_type == "dense":
+        return ["attn", "mlp"]
+    if cfg.arch_type == "moe":
+        return ["attn", "moe"]
+    if cfg.arch_type == "hybrid":
+        out = []
+        for pos in range(cfg.hybrid_period):
+            out.append("attn" if pos == 0 else "mamba")
+            if cfg.moe_every and pos % cfg.moe_every == cfg.moe_every - 1:
+                out.append("moe")
+            else:
+                out.append("mlp")
+        return out
+    # ssm / xlstm: one mLSTM block + one sLSTM block per period
+    return ["mlstm", "mlp", "slstm", "mlp"]
+
+
+def n_scan_steps(cfg: ModelConfig) -> int:
+    if cfg.arch_type == "hybrid":
+        return cfg.n_layers // cfg.hybrid_period
+    if cfg.arch_type == "ssm":
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+_SUBLAYER_INIT = {
+    "attn": _attn_params, "mlp": _mlp_params, "moe": _moe_params,
+    "mamba": _mamba_params, "mlstm": _mlstm_params, "slstm": _slstm_params,
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layout = period_layout(cfg)
+    steps = n_scan_steps(cfg)
+
+    def step_params(k):
+        ks = jax.random.split(k, len(layout))
+        return [
+            _SUBLAYER_INIT[name](ks[i], cfg)
+            for i, name in enumerate(layout)
+        ]
+
+    stacked = jax.vmap(step_params)(jax.random.split(k_layers, steps))
+    params = {
+        "embed": _dense_init(k_embed, (cfg.vocab, cfg.d_model), scale=0.02),
+        "blocks": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), BF16),
+    }
+    if not cfg.tied_embeddings:
+        params["lm_head"] = _dense_init(k_head, (cfg.d_model, cfg.vocab),
+                                        scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _apply_sublayer(name, p, cfg, x, positions):
+    """Returns (x_out, aux_loss, cache_out)."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    cache_out = None
+    aux = jnp.zeros((), F32)
+    if name == "attn":
+        o, k, v = attention(p, cfg, h, positions)
+        cache_out = (k, v)
+    elif name == "mlp":
+        o = swiglu(p, h)
+    elif name == "moe":
+        B, S, d = h.shape
+        o2d, aux = moe(p, cfg, h.reshape(B * S, d))
+        o = o2d.reshape(B, S, d)
+    elif name == "mamba":
+        o, st = mamba(p, cfg, h)
+        cache_out = st
+    elif name == "mlstm":
+        o, st = mlstm(p, cfg, h)
+        cache_out = st
+    elif name == "slstm":
+        o, st = slstm(p, cfg, h)
+        cache_out = st
+    else:
+        raise ValueError(name)
+    return x + o, aux, cache_out
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None,
+            collect_cache=False, act_spec=None):
+    """tokens (B,S) int32 -> logits (B,S,V).  prefix_embeds (B,P,d)
+    replaces the embeddings of the first P positions (modality stub).
+    ``act_spec``: optional PartitionSpec pinned onto the residual stream
+    between blocks (Megatron-style sequence sharding over the "model"
+    axis — keeps saved remat carries 1/TP of the full activation)."""
+    layout = period_layout(cfg)
+
+    def pin(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    x = params["embed"][tokens].astype(BF16)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(BF16), x[:, P:]], axis=1)
+    x = pin(x)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=I32), (B, S))
+
+    def step(carry, p_step):
+        x, aux = carry
+        caches = []
+        for i, name in enumerate(layout):
+            x, a, c = _apply_sublayer(name, p_step[i], cfg, x, positions)
+            aux = aux + a
+            caches.append(c)
+        x = pin(x)
+        if collect_cache:
+            return (x, aux), tuple(c for c in caches if c is not None)
+        return (x, aux), None
+
+    step_fn = jax.checkpoint(step) if not collect_cache else step
+    (x, aux), caches = lax.scan(step_fn, (x, jnp.zeros((), F32)),
+                                params["blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    return (logits, caches, aux) if collect_cache else (logits, aux)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, act_spec=None):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    prefix = batch.get("prefix_embeds")
+    logits, aux = forward(cfg, params, tokens, prefix, act_spec=act_spec)
+    logits = logits.astype(F32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(I32),
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(F32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache + decode
+# ---------------------------------------------------------------------------
+def make_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode-time state: paged KV pool for attention sublayers, recurrent
+    states for mamba/xlstm sublayers."""
+    layout = period_layout(cfg)
+    steps = n_scan_steps(cfg)
+    window = cfg.sliding_window or 0
+    eff_seq = min(max_seq, window + PAGE_SIZE) if window else max_seq
+    pages_per_seq = (eff_seq + PAGE_SIZE - 1) // PAGE_SIZE
+    n_attn = sum(1 for l in layout if l == "attn")
+    n_mamba = sum(1 for l in layout if l == "mamba")
+    n_mlstm = sum(1 for l in layout if l == "mlstm")
+    n_slstm = sum(1 for l in layout if l == "slstm")
+    state = {
+        "seq_lens": jnp.zeros((batch,), I32),
+        "block_tables": jnp.broadcast_to(
+            jnp.arange(pages_per_seq, dtype=I32)[None],
+            (batch, pages_per_seq)),
+    }
+    if n_attn:
+        # batch-major page pool: (steps, n_attn, B, pages, page, kv, dh);
+        # block_tables holds per-sequence page ids (identity here; the
+        # serving engine aliases pages for shared prefixes)
+        state["kpool"] = jnp.zeros(
+            (steps, n_attn, batch, pages_per_seq, PAGE_SIZE,
+             cfg.n_kv_heads, cfg.d_head), BF16)
+        state["vpool"] = jnp.zeros_like(state["kpool"])
+    if n_mamba:
+        state["mamba_h"] = jnp.zeros(
+            (steps, n_mamba, batch, cfg.d_inner, cfg.ssm_state), F32)
+        state["mamba_conv"] = jnp.zeros(
+            (steps, n_mamba, batch, cfg.conv_width - 1, cfg.d_inner), BF16)
+    if n_mlstm:
+        D = cfg.d_model // cfg.n_heads
+        state["mlstm_C"] = jnp.zeros(
+            (steps, n_mlstm, batch, cfg.n_heads, D, D), F32)
+    if n_slstm:
+        state["slstm_h"] = jnp.zeros((steps, n_slstm, batch, cfg.d_model),
+                                     F32)
+        state["slstm_c"] = jnp.zeros_like(state["slstm_h"])
+    return state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """One decode step.  tokens (B,) int32.  Returns (logits, state')."""
+    layout = period_layout(cfg)
+    B = tokens.shape[0]
+    window = cfg.sliding_window or 0
+    x = params["embed"][tokens][:, None, :].astype(BF16)       # (B,1,d)
+    seq_lens = state["seq_lens"]
+    positions = seq_lens[:, None]                              # (B,1)
+    bt = state["block_tables"]                                 # (B,P)
+    n_pages = bt.shape[1]
+    kv_len = n_pages * PAGE_SIZE
+
+    # ring-buffer page index under a sliding window, else linear growth
+    if window:
+        slot = seq_lens % (n_pages * PAGE_SIZE)
+    else:
+        slot = jnp.minimum(seq_lens, kv_len - 1)
+    page_of_slot = bt[jnp.arange(B), (slot // PAGE_SIZE) % n_pages]
+    off = slot % PAGE_SIZE
+
+    counters = {"attn": 0, "mamba": 0, "mlstm": 0, "slstm": 0}
+    scan_idx = {"attn": [], "mamba": [], "mlstm": [], "slstm": []}
+    for name in layout:
+        if name in counters:
+            scan_idx[name].append(counters[name])
+            counters[name] += 1
+
+    def step(carry, inp):
+        x = carry
+        p_step, kpool, vpool, m_h, m_conv, ml_C, sl_h, sl_c = inp
+        idx = {"attn": 0, "mamba": 0, "mlstm": 0, "slstm": 0}
+        for i, name in enumerate(layout):
+            p = p_step[i]
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            if name == "attn":
+                j = idx["attn"]; idx["attn"] += 1
+                # project new kv and write into the page pool
+                q = (h @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+                k = (h @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+                v = (h @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+                if cfg.qk_norm:
+                    q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+                    k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+                barange = jnp.arange(B)
+                kpool = kpool.at[j, barange, page_of_slot, off].set(k[:, 0])
+                vpool = vpool.at[j, barange, page_of_slot, off].set(v[:, 0])
+                # gather this sequence's pages through the block table
+                kg = jnp.take_along_axis(
+                    kpool[j], bt[:, :, None, None, None], axis=1
+                ).reshape(B, kv_len, cfg.n_kv_heads, cfg.d_head)
+                vg = jnp.take_along_axis(
+                    vpool[j], bt[:, :, None, None, None], axis=1
+                ).reshape(B, kv_len, cfg.n_kv_heads, cfg.d_head)
+                if window:
+                    base = (seq_lens // PAGE_SIZE) * PAGE_SIZE
+                    kv_pos = (jnp.arange(kv_len, dtype=I32)[None] +
+                              jnp.zeros((B, 1), I32))
+                    # ring: absolute position of slot s
+                    wrap = (slot[:, None] - jnp.arange(kv_len, dtype=I32)
+                            [None]) % kv_len
+                    kv_pos = seq_lens[:, None] - wrap
+                else:
+                    kv_pos = jnp.broadcast_to(
+                        jnp.arange(kv_len, dtype=I32)[None], (B, kv_len))
+                G = cfg.n_heads // cfg.n_kv_heads
+                qg = q.reshape(B, 1, cfg.n_kv_heads, G, cfg.d_head)
+                o = _online_attn(qg, kg, vg, positions, kv_pos, window)
+                o = o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p["wo"]
+            elif name == "mlp":
+                o = swiglu(p, h)
+            elif name == "moe":
+                o2d, _ = moe(p, cfg, h.reshape(B, -1))
+                o = o2d.reshape(B, 1, -1)
+            elif name == "mamba":
+                j = idx["mamba"]; idx["mamba"] += 1
+                o, st = mamba(p, cfg, h, state=(m_h[j], m_conv[j]))
+                m_h = m_h.at[j].set(st[0])
+                m_conv = m_conv.at[j].set(st[1])
+            elif name == "mlstm":
+                j = idx["mlstm"]; idx["mlstm"] += 1
+                o, C = mlstm(p, cfg, h, state=ml_C[j])
+                ml_C = ml_C.at[j].set(C)
+            elif name == "slstm":
+                j = idx["slstm"]; idx["slstm"] += 1
+                o, st = slstm(p, cfg, h, state=(sl_h[j], sl_c[j]))
+                sl_h = sl_h.at[j].set(st[0])
+                sl_c = sl_c.at[j].set(st[1])
+            x = x + o
+        return x, (kpool, vpool, m_h, m_conv, ml_C, sl_h, sl_c)
+
+    steps = n_scan_steps(cfg)
+    dummy = jnp.zeros((steps, 1, 1), BF16)
+    xs = (params["blocks"],
+          state.get("kpool", dummy), state.get("vpool", dummy),
+          state.get("mamba_h", dummy), state.get("mamba_conv", dummy),
+          state.get("mlstm_C", dummy),
+          state.get("slstm_h", dummy), state.get("slstm_c", dummy))
+    x, pools = lax.scan(step, x, xs)
+    kpool, vpool, m_h, m_conv, ml_C, sl_h, sl_c = pools
+    new_state = dict(state)
+    new_state["seq_lens"] = seq_lens + 1
+    for nm, val in [("kpool", kpool), ("vpool", vpool),
+                    ("mamba_h", m_h), ("mamba_conv", m_conv),
+                    ("mlstm_C", ml_C), ("slstm_h", sl_h),
+                    ("slstm_c", sl_c)]:
+        if nm in state:
+            new_state[nm] = val
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head)[:, 0]
+    return logits, new_state

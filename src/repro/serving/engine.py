@@ -1,0 +1,168 @@
+"""Continuous-batching serving engine — FASE's host runtime at pod scale.
+
+The mapping (DESIGN.md §2, Layer B):
+
+  * decode slots = the paper's CPUs: a fixed-width jitted ``serve_step``
+    runs every iteration; the host scheduler parks/fills slots exactly like
+    FASE redirects parked cores (non-preemptive continuous batching);
+  * the per-step **command batch** = HTP: one dense array set (new tokens,
+    block tables, page copy/zero lists) crosses host->device per step, and
+    its bytes are accounted per category like the UART traffic figures;
+  * the device-side **stop mask** = HFutex: per-slot stop conditions
+    (EOS / max-len) accumulate on device and the host polls the packed
+    mask every ``poll_every`` steps instead of syncing each step — the
+    same "filter redundant round-trips at the target" trick as §V-B.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import core as M
+from ..models.config import ModelConfig
+from ..models.core import PAGE_SIZE
+from .htp import CommandBatch
+from .pages import PagedKVManager
+
+I32 = jnp.int32
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int = 16
+    eos: int = 1
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class TrafficStats:
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    by_cat: dict = field(default_factory=dict)
+
+    def add(self, cat, n, d2h=False):
+        if d2h:
+            self.d2h_bytes += n
+        else:
+            self.h2d_bytes += n
+        self.by_cat[cat] = self.by_cat.get(cat, 0) + n
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_seq: int = 512, poll_every: int = 4, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.poll_every = poll_every
+        self.state = M.make_decode_state(cfg, slots, max_seq)
+        self.pages_per_seq = self.state["block_tables"].shape[1]
+        self.kv = PagedKVManager(slots * self.pages_per_seq * 2)
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}      # slot -> request
+        self.traffic = TrafficStats()
+        self.steps = 0
+
+        def step_fn(params, state, cur, override, stop_mask, eos,
+                    max_lens, out_buf):
+            # host override (prompt feed / fresh admissions) else the
+            # device-resident autoregressive token — no per-step d2h sync
+            tokens = jnp.where(override >= 0, override.astype(I32), cur)
+            logits, state = M.decode_step(cfg, params, state, tokens)
+            nxt = jnp.argmax(logits, axis=-1).astype(I32)
+            stopped = (nxt == eos) | (state["seq_lens"] >= max_lens)
+            stop_mask = stop_mask | stopped
+            nxt = jnp.where(stop_mask, eos, nxt)
+            # device-side output ring: emitted token at input position
+            idx = jnp.clip(state["seq_lens"] - 1, 0, out_buf.shape[1] - 1)
+            out_buf = out_buf.at[jnp.arange(out_buf.shape[0]), idx].set(nxt)
+            return state, nxt, stop_mask, out_buf
+
+        self._step = jax.jit(step_fn, donate_argnums=(1, 7))
+
+    # -- scheduling ------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.kv.start_seq(req.rid, tuple(req.prompt))
+            self.active[slot] = req
+            # host->device: prompt prefill here is token-by-token decode
+            # (simple engine); the block table + seq_len update is the
+            # command batch
+            self._slot_tokens[slot] = list(req.prompt)
+            self._slot_eos[slot] = req.eos
+            self._slot_maxlen[slot] = len(req.prompt) + req.max_new
+            self.state["seq_lens"] = \
+                self.state["seq_lens"].at[slot].set(0)
+            self._stop_mask = self._stop_mask.at[slot].set(False)
+            self.traffic.add("admit", 8 * len(req.prompt))
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, max_steps: int = 4096):
+        self._slot_tokens = {s: [] for s in range(self.slots)}
+        self._slot_eos = {s: 0 for s in range(self.slots)}
+        self._slot_maxlen = {s: 0 for s in range(self.slots)}
+        self._stop_mask = jnp.zeros((self.slots,), bool)
+        cur = jnp.zeros((self.slots,), I32)
+        out_buf = jnp.zeros((self.slots, self.max_seq), I32)
+        finished = []
+        while (self.queue or self.active) and self.steps < max_steps:
+            self._admit()
+            if not self.active:
+                break
+            # assemble the command batch (HTP analogue): overrides for
+            # prompt-phase slots, block-table updates, page commands
+            cb = CommandBatch.empty(self.slots, self.pages_per_seq)
+            for slot, req in self.active.items():
+                pending = self._slot_tokens[slot]
+                if pending:
+                    cb.override[slot] = pending.pop(0)
+                self.kv.append_token(req.rid)
+                cb.eos[slot] = self._slot_eos[slot]
+                cb.max_lens[slot] = self._slot_maxlen[slot]
+                cb.block_tables[slot] = self.kv.block_table(
+                    req.rid, self.pages_per_seq)
+            cb.page_copies, cb.page_zeros = self.kv.drain_commands()
+            cb.account(self.traffic)
+            self.state["block_tables"] = jnp.asarray(cb.block_tables)
+            self.state, cur, self._stop_mask, out_buf = self._step(
+                self.params, self.state, cur,
+                jnp.asarray(cb.override), self._stop_mask,
+                jnp.asarray(cb.eos), jnp.asarray(cb.max_lens), out_buf)
+            self.steps += 1
+            # d2h sync only every poll_every steps: the stop mask and the
+            # output ring accumulate on device meanwhile (HFutex analogue)
+            if self.steps % self.poll_every == 0 or                     all(not self._slot_tokens[s] for s in self.active):
+                mask = np.asarray(self._stop_mask)
+                lens = np.asarray(self.state["seq_lens"])
+                buf = np.asarray(out_buf)
+                self.traffic.add("poll", mask.nbytes + 8 * self.slots,
+                                 d2h=True)
+                for slot, req in list(self.active.items()):
+                    if self._slot_tokens[slot]:
+                        continue                     # still prefilling
+                    p_len = len(req.prompt)
+                    gen = buf[slot, p_len - 1:lens[slot] - 1]
+                    req.out = [int(t) for t in gen]
+                    self.traffic.add("tokens_out", gen.nbytes, d2h=True)
+                    if mask[slot]:
+                        req.done = True
+                        if req.out and req.out[-1] == req.eos:
+                            req.out.pop()
+                        finished.append(req)
+                        self.kv.finish_seq(req.rid)
+                        del self.active[slot]
+        return finished

@@ -1,0 +1,39 @@
+"""The per-step host->device command batch — HTP at pod scale.
+
+FASE ships Redirect/PageS/PageCP/RegW requests over a narrow UART; the
+serving engine ships exactly one dense command batch per decode step over
+the dispatch link: token overrides (Redirect analogues), block tables
+(MMU/page-table analogues), and page copy/zero lists (PageCP/PageS).
+Bytes are accounted per category so the Layer-B traffic benchmarks mirror
+the paper's Fig 13.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class CommandBatch:
+    override: np.ndarray          # (slots,) int64; -1 = no override
+    eos: np.ndarray               # (slots,) int32
+    max_lens: np.ndarray          # (slots,) int32
+    block_tables: np.ndarray      # (slots, pages) int32
+    page_copies: list = field(default_factory=list)   # [(src, dst)]
+    page_zeros: list = field(default_factory=list)    # [page]
+
+    @classmethod
+    def empty(cls, slots: int, pages: int) -> "CommandBatch":
+        return cls(
+            override=np.full((slots,), -1, np.int64),
+            eos=np.zeros((slots,), np.int32),
+            max_lens=np.full((slots,), 1 << 30, np.int32),
+            block_tables=np.zeros((slots, pages), np.int32),
+        )
+
+    def account(self, traffic) -> None:
+        traffic.add("overrides", 8 * int((self.override >= 0).sum()))
+        traffic.add("block_tables", self.block_tables.nbytes)
+        traffic.add("page_cmds",
+                    8 * (len(self.page_copies) + len(self.page_zeros)))

@@ -1,0 +1,106 @@
+"""Assembler unit tests + differential against the pure-Python target."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.target import asm
+from repro.core.target.pysim import PySim
+
+
+def run_bare(src, mem=1 << 20, cores=1):
+    img = asm.assemble(src)
+    sim = PySim(cores, mem)
+    for seg in img.segments:
+        data = bytes(seg.data)
+        n = (len(data) + 7) // 8
+        words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+        for i, w in enumerate(words):
+            sim.mem_write_word(seg.vaddr + 8 * i, int(w))
+    sim.redirect(0, img.entry)
+    sim.run()
+    return sim, img
+
+
+def test_fib():
+    sim, _ = run_bare("""
+_start:
+    li sp, 0x8000
+    li a0, 10
+    call fib
+    mv s0, a0
+    li a7, 93
+    ecall
+fib:
+    li t0, 2
+    blt a0, t0, 1f
+    addi sp, sp, -24
+    sd ra, 0(sp)
+    sd s1, 8(sp)
+    sd a0, 16(sp)
+    addi a0, a0, -1
+    call fib
+    mv s1, a0
+    ld a0, 16(sp)
+    addi a0, a0, -2
+    call fib
+    add a0, a0, s1
+    ld ra, 0(sp)
+    ld s1, 8(sp)
+    addi sp, sp, 24
+1:
+    ret
+""")
+    assert sim.reg_read(0, 8) == 55
+    assert sim.csr_read(0, "mcause") == 8
+
+
+def test_numeric_labels_scope():
+    sim, _ = run_bare("""
+_start:
+    li t0, 0
+1:
+    addi t0, t0, 1
+    li t1, 3
+    blt t0, t1, 1b
+    mv s0, t0
+    li a7, 93
+    ecall
+""")
+    assert sim.reg_read(0, 8) == 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=-(2**63), max_value=2**63 - 1))
+def test_li_roundtrip(value):
+    sim, _ = run_bare(f"""
+_start:
+    li s0, {value}
+    li a7, 93
+    ecall
+""")
+    assert sim.reg_read(0, 8) == value & ((1 << 64) - 1)
+
+
+def test_data_directives():
+    sim, img = run_bare("""
+_start:
+    la t0, tbl
+    ld s0, 0(t0)
+    lw s1, 8(t0)
+    lbu s2, 12(t0)
+    li a7, 93
+    ecall
+.data
+tbl:
+    .dword 0x1122334455667788
+    .word 0xAABBCCDD
+    .byte 0x5A
+""")
+    assert sim.reg_read(0, 8) == 0x1122334455667788
+    assert sim.reg_read(0, 9) == 0xFFFFFFFFAABBCCDD  # lw sign-extends
+    assert sim.reg_read(0, 18) == 0x5A
+
+
+def test_out_of_range_imm_raises():
+    with pytest.raises(asm.AsmError):
+        asm.assemble("_start:\n  addi t0, t0, 4096\n")

@@ -1,0 +1,92 @@
+"""The jitted XLA target must be bit-identical to the pure-Python target
+under paging + atomics + multicore interleaving."""
+import numpy as np
+import pytest
+
+from repro.core.interface import JaxTarget
+from repro.core.target import asm, isa
+from repro.core.target.pysim import PySim
+
+SRC = """
+_start:
+    li sp, 0x110000
+    slli t0, a0, 12
+    sub sp, sp, t0
+    la s0, counter
+    li t1, 40
+loop:
+    amoadd.d t2, t1, (s0)
+    amoadd.w t3, t1, (s0)
+    lr.d t4, (s0)
+    addi t4, t4, 1
+    sc.d t5, t4, (s0)
+    amomax.d t6, a0, (s0)
+    amominu.w s1, t1, (s0)
+    la s2, bytes_area
+    add s3, s2, a0
+    sb t1, 0(s3)
+    lb s4, 0(s3)
+    sh t1, 8(s2)
+    lhu s5, 8(s2)
+    mul s6, t1, t3
+    divu s7, s6, t1
+    rem s8, s6, t1
+    mulh s9, s6, t3
+    addi t1, t1, -1
+    bnez t1, loop
+    li a7, 93
+    ecall
+.data
+counter: .dword 0
+bytes_area: .zero 64
+"""
+
+
+def build_tables(t):
+    root_ppn, l1_ppn, l0_ppn = 2, 3, 4
+    t.mem_write_word(root_ppn * 4096, (l1_ppn << 10) | isa.PTE_V)
+    t.mem_write_word(l1_ppn * 4096, (l0_ppn << 10) | isa.PTE_V)
+    flags = (isa.PTE_V | isa.PTE_R | isa.PTE_W | isa.PTE_X | isa.PTE_U |
+             isa.PTE_A | isa.PTE_D)
+    for vpn0 in list(range(16, 96)) + list(range(256, 272)):
+        t.mem_write_word(l0_ppn * 4096 + vpn0 * 8, (vpn0 << 10) | flags)
+    for c in range(t.n_cores):
+        t.set_satp(c, (8 << 60) | root_ppn)
+
+
+def load(t, img, nc):
+    for seg in img.segments:
+        data = bytes(seg.data)
+        n = (len(data) + 7) // 8
+        words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+        for i, w in enumerate(words):
+            t.mem_write_word(seg.vaddr + 8 * i, int(w))
+    build_tables(t)
+    for c in range(nc):
+        t.reg_write(c, 10, c)
+        t.redirect(c, img.entry)
+
+
+@pytest.mark.parametrize("nc", [1, 4])
+def test_differential(nc):
+    img = asm.assemble(SRC)
+    mem = 1 << 21
+    jt = JaxTarget(nc, mem)
+    ps = PySim(nc, mem)
+    load(jt, img, nc)
+    load(ps, img, nc)
+    for t in (jt, ps):
+        for _ in range(nc * 2):
+            for c in t.pending_cores():
+                t.clear_pending(c)
+                t.park(c)
+            t.run()
+    for c in range(nc):
+        for r in range(32):
+            assert jt.reg_read(c, r) == ps.reg_read(c, r), (c, r)
+        for csr in ("mcause", "mepc", "mtval"):
+            assert jt.csr_read(c, csr) == ps.csr_read(c, csr)
+        assert jt.get_uticks(c) == ps.get_uticks(c)
+        assert jt.get_instret(c) == ps.get_instret(c)
+    sym = img.symbols["counter"]
+    assert jt.mem_read_word(sym) == ps.mem_read_word(sym)

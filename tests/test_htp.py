@@ -1,0 +1,91 @@
+"""HTP protocol, channel timing, HFutex filtering."""
+from repro.core import htp
+from repro.core.channel import UartChannel
+from repro.core.hfutex import HFutexCache
+from repro.core.runtime import FaseRuntime
+from repro.core.target.pysim import PySim
+from repro.core.target import asm
+from repro.core.workloads.libc import LIBC
+
+
+def test_htp_vs_direct_page_reduction():
+    """Paper §IV-B: page-level HTP ops cut UART traffic to <5% (pages) and
+    >95% overall vs raw per-port access."""
+    for name in ("PageW", "PageR"):
+        # data-carrying ops: payload dominates, still >45% saved
+        spec = htp.SPECS[name]
+        assert spec.total_bytes / htp.direct_bytes(name) < 0.55, name
+    for name in ("PageS", "PageCP"):
+        spec = htp.SPECS[name]
+        assert spec.total_bytes / htp.direct_bytes(name) < 0.01, name
+    assert htp.SPECS["PageS"].total_bytes / htp.direct_bytes("PageS") < 0.01
+    assert htp.SPECS["PageCP"].total_bytes / htp.direct_bytes("PageCP") < 0.01
+
+
+def test_channel_serialisation():
+    ch = UartChannel(baud=921600)
+    t1 = ch.send(100, at_tick=0, category="a")
+    t2 = ch.send(100, at_tick=0, category="b")   # queued behind the first
+    assert t2 >= 2 * t1 - 1
+    # 8N2 framing: 11 bits per byte at 100MHz
+    assert ch.ticks_for_bytes(1) == round(11 * 100e6 / 921600)
+
+
+def test_channel_oracle_mode_free():
+    ch = UartChannel(enabled=False)
+    assert ch.send(10000, at_tick=5, category="x") == 5
+    assert ch.total_bytes == 10000   # traffic still accounted
+
+
+def test_hfutex_cache_rules():
+    hf = HFutexCache(2, slots=2)
+    assert not hf.lookup(0, 0x1000)
+    hf.insert(0, 0x1000, 0x9000)
+    assert hf.lookup(0, 0x1000)
+    hf.insert(0, 0x2000, 0x9008)
+    hf.insert(0, 0x3000, 0x9010)      # evicts 0x1000 (FIFO, 2 slots)
+    assert not hf.lookup(0, 0x1000)
+    hf.clear_pa(0x9010)
+    assert not hf.lookup(0, 0x3000)
+    hf.insert(1, 0x2000, 0x9008)
+    hf.clear_core(1)
+    assert not hf.lookup(1, 0x2000)
+
+
+def _wake_loop_runtime(hfutex_enabled):
+    src = LIBC + "\n.text\n" + """
+main:
+    addi sp, sp, -16
+    sd ra, 8(sp)
+    li s0, 6
+1:
+    la a0, word
+    li a1, FUTEX_WAKE
+    li a2, 1
+    call futex3
+    addi s0, s0, -1
+    bnez s0, 1b
+    li a0, 0
+    ld ra, 8(sp)
+    addi sp, sp, 16
+    ret
+.data
+.align 3
+word: .dword 0
+"""
+    img = asm.assemble(src)
+    rt = FaseRuntime(PySim(1, 1 << 22), mode="fase",
+                     hfutex=hfutex_enabled)
+    rt.load(img, ["wk"])
+    rep = rt.run(max_ticks=1 << 34)
+    return rt, rep
+
+
+def test_hfutex_filters_redundant_wakes():
+    rt_on, rep_on = _wake_loop_runtime(True)
+    rt_off, rep_off = _wake_loop_runtime(False)
+    # first wake reaches the host and arms the mask; later ones filtered
+    assert rt_on.stats["hfutex_hits"] >= 4
+    assert rep_on.syscalls["futex"] < rep_off.syscalls["futex"]
+    assert rep_on.traffic_total < rep_off.traffic_total
+    assert rep_on.ticks < rep_off.ticks      # less stall time end-to-end

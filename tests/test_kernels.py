@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.page_ops import page_ops as PK
+from repro.kernels.page_ops import ref as PR
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((2, 256, 64), jnp.float32),
+    ((1, 128, 128), jnp.float32),
+    ((3, 384, 64), jnp.bfloat16),
+])
+def test_flash_attention_allclose(shape, dtype):
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal(shape), dtype)
+               for _ in range(3))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_non_causal():
+    rng = np.random.default_rng(1)
+    q, k, v = (jnp.asarray(rng.standard_normal((2, 256, 64)), jnp.float32)
+               for _ in range(3))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([1, 2]), st.sampled_from([2, 4]),
+       st.sampled_from([1, 2]), st.sampled_from([16, 32]),
+       st.sampled_from([8, 16]), st.integers(1, 4))
+def test_paged_attention_property(B, H, Hkv, D, page, P):
+    if H % Hkv:
+        H = Hkv
+    rng = np.random.default_rng(B * 131 + H)
+    NP = B * P
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kpool = jnp.asarray(rng.standard_normal((NP, page, Hkv, D)),
+                        jnp.float32)
+    vpool = jnp.asarray(rng.standard_normal((NP, page, Hkv, D)),
+                        jnp.float32)
+    bt = jnp.asarray(rng.permutation(NP).reshape(B, P), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, P * page + 1, (B,)), jnp.int32)
+    out = paged_attention(q, kpool, vpool, bt, lens, interpret=True)
+    ref = paged_attention_ref(q, kpool, vpool, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_page_ops_allclose():
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(rng.standard_normal((8, 16, 2, 32)), jnp.float32)
+    pairs = jnp.asarray([[0, 3], [5, 7]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(PK.page_copy(pool, pairs, interpret=True)),
+        np.asarray(PR.page_copy_ref(pool, pairs)))
+    ids = jnp.asarray([1, 4], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(PK.page_set(pool, ids, 0.0, interpret=True)),
+        np.asarray(PR.page_set_ref(pool, ids, 0.0)))
+    tab = jnp.asarray([7, 2, 0], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(PK.page_gather(pool, tab, interpret=True)),
+        np.asarray(PR.page_gather_ref(pool, tab)))

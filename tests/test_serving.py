@@ -1,0 +1,55 @@
+"""Serving engine: continuous batching, paged KV + prefix sharing, stop
+mask polling (the FASE-pattern analogues, DESIGN.md Layer B)."""
+import jax.numpy as jnp
+
+from repro.configs import CONFIGS
+from repro.models import core as M
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.pages import PagedKVManager
+
+
+def test_engine_batches_and_finishes():
+    cfg = CONFIGS["qwen3-8b"].smoke()
+    params = M.init_params(cfg, 0)
+    eng = ServeEngine(cfg, params, slots=2, max_seq=128, poll_every=4)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[5 + i, 7, 11], max_new=6, eos=1))
+    done = eng.run()
+    assert len(done) == 4
+    assert all(len(r.out) <= 7 for r in done)
+    assert eng.traffic.by_cat["block_tables"] > 0
+    # d2h polls are amortised: far fewer polls than steps
+    assert eng.traffic.by_cat["poll"] < eng.steps * 16
+
+
+def test_greedy_determinism_across_batching():
+    cfg = CONFIGS["qwen3-8b"].smoke()
+    params = M.init_params(cfg, 0)
+    outs = []
+    for slots in (1, 2):
+        eng = ServeEngine(cfg, params, slots=slots, max_seq=128,
+                          poll_every=2)
+        eng.submit(Request(rid=0, prompt=[9, 8, 7], max_new=5, eos=1))
+        done = eng.run()
+        outs.append(done[0].out)
+    assert outs[0] == outs[1]
+
+
+def test_prefix_sharing_and_cow():
+    kv = PagedKVManager(64)
+    from repro.models.core import PAGE_SIZE
+    prompt = tuple(range(PAGE_SIZE * 2 + 3))
+    kv.start_seq(1, prompt)
+    a1 = kv.stats["alloc"]
+    kv.start_seq(2, prompt)
+    assert kv.stats["prefix_hits"] == 2          # two full pages shared
+    assert kv.stats["alloc"] == a1 + 1           # only a private tail
+    # appending into the shared page triggers COW... tail is private, so
+    # force length onto the shared boundary
+    sp = kv.seqs[2]
+    sp.length = PAGE_SIZE                         # points into shared page
+    kv.append_token(2)
+    assert kv.stats["cow"] == 1
+    kv.finish_seq(1)
+    kv.finish_seq(2)
+    assert not kv.refcnt

@@ -1,0 +1,41 @@
+"""Sharding rules align with parameter pytrees; dry-run helpers work on a
+local 1x1 mesh (full 512-device lowering exercised by launch/dryrun.py)."""
+import jax
+
+from repro.configs import CONFIGS
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_local_mesh
+from repro.launch import steps as st
+from repro.models import core as M
+
+
+def test_param_specs_cover_tree():
+    mesh = make_local_mesh()
+    for name in ("qwen3-8b", "phi3.5-moe-42b-a6.6b", "jamba-v0.1-52b",
+                 "xlstm-350m"):
+        cfg = CONFIGS[name].smoke()
+        params = jax.eval_shape(lambda c=cfg: M.init_params(c, 0))
+        specs = sh.param_specs(cfg, mesh)
+        shardings = sh.make_shardings(mesh, specs)
+        # structures must match exactly
+        jax.tree.map(lambda a, b: None, params, shardings)
+
+
+def test_input_specs_all_cells():
+    for name, cfg in CONFIGS.items():
+        for shape in st.SHAPES:
+            ok, why = st.cell_supported(cfg, shape)
+            if not ok:
+                assert "full-attn" in why
+                continue
+            specs = st.input_specs(cfg, shape)
+            assert "params" in specs
+
+
+def test_long500k_skips_are_exactly_the_quadratic_archs():
+    skips = [n for n, c in CONFIGS.items()
+             if not st.cell_supported(c, "long_500k")[0]]
+    assert set(skips) == {
+        "internvl2-76b", "musicgen-medium", "deepseek-coder-33b",
+        "chatglm3-6b", "qwen3-8b", "llama3-405b",
+        "llama4-scout-17b-a16e", "phi3.5-moe-42b-a6.6b"}

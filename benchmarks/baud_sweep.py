@@ -1,5 +1,9 @@
-"""Paper Fig 16: GAPBS score error vs UART baud rate."""
+"""Paper Fig 16: GAPBS score error vs UART baud rate — plus a ``--link``
+axis so the same sweep can pit the 8N2 UART against the modelled
+PCIe/AXI-DMA backend (whose error is latency- not bandwidth-dominated)."""
 from __future__ import annotations
+
+import argparse
 
 from .common import run_workload, save_json, trial_mean_ns
 from repro.core.workloads import graphgen
@@ -7,24 +11,34 @@ from repro.core.workloads import graphgen
 BAUDS = [115200, 460800, 921600, 3_000_000]
 
 
-def run(quick=False):
+def run(quick=False, link="uart"):
     g = graphgen.rmat(5 if quick else 7, 8, weights=True)
     rows = []
     for name in (["bc"] if quick else ["bc", "sssp"]):
         _, rep0, _ = run_workload(name, ["g.bin", "2", "2"], mode="oracle",
                                   files={"g.bin": g})
         base = trial_mean_ns(rep0.stdout)
-        for baud in (BAUDS[:2] if quick else BAUDS):
+        if link == "uart":
+            sweep = BAUDS[:2] if quick else BAUDS
+        else:
+            sweep = [0]       # non-UART links have no baud axis
+        for baud in sweep:
             _, rep, _ = run_workload(name, ["g.bin", "2", "2"],
-                                     mode="fase", baud=baud,
+                                     mode="fase", link=link,
+                                     baud=baud or 921600,
                                      files={"g.bin": g})
             err = (trial_mean_ns(rep.stdout) - base) / base
-            rows.append(dict(workload=name, baud=baud, err=err))
-            print(f"baud_sweep,{name}@{baud},{err*100:.1f},score-err%",
-                  flush=True)
+            tag = f"{name}@{baud}" if link == "uart" else f"{name}@{link}"
+            rows.append(dict(workload=name, link=link, baud=baud, err=err))
+            print(f"baud_sweep,{tag},{err*100:.1f},score-err%", flush=True)
     save_json("baud_sweep.json", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--link", default="uart",
+                    choices=["uart", "pcie", "oracle"])
+    a = ap.parse_args()
+    run(quick=a.quick, link=a.link)

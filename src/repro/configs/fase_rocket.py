@@ -1,4 +1,4 @@
 """The paper's own target system (Rocket on KCU105, Table III)."""
-from .registry import FASE_ROCKET
+from .registry import FASE_ROCKET, FASE_ROCKET_PCIE  # noqa: F401
 
 CONFIG = FASE_ROCKET

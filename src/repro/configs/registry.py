@@ -62,8 +62,14 @@ xlstm_350m = _add(ModelConfig(
     n_kv_heads=4, d_ff=4096, vocab=50304, arch_type="ssm", xlstm=True))
 
 # --- the paper's own target (FASE on Rocket) is a core config, not an LM ---
+# ``link`` selects the host<->target channel backend by name from
+# repro.core.channel.CHANNELS ("uart" | "pcie" | "oracle").
 FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
-                   baud=921600, l1=32 << 10, l2=256 << 10)
+                   link="uart", baud=921600, l1=32 << 10, l2=256 << 10)
+
+# the same target behind a modelled PCIe/AXI-DMA link (the scale-up
+# direction: bandwidth-rich, latency-dominated — batching matters)
+FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie"}
 
 
 def get(name: str) -> ModelConfig:

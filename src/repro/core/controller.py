@@ -1,171 +1,143 @@
-"""FASE hardware controller — the behavioural twin of paper §IV-C.
+"""Per-request compatibility shim over the HTP session layer.
 
-Bridges host runtime and target CPU through the minimal CPU interface:
-every HTP request from Table II is applied to the target as its documented
-injection/Reg-port pattern's *effect*, while its wire bytes and controller
-cycles are accounted against the UART channel model.  The two-level state
-machine of Fig 4 is therefore modelled as (request parse) -> (per-request
-execution pattern with known cost), which is exact for timing purposes
-because every pattern's cost is statically known from Table II.
+Historically ``FaseController`` *was* the host-side controller model: 14
+synchronous methods, each threading an explicit ``at`` tick in and a
+completion tick out, with the UART hard-wired underneath.  The controller
+execution model (paper §IV-C, Fig 4) now lives in
+:class:`repro.core.session.HtpSession`: the runtime builds
+:class:`~repro.core.session.HtpTransaction` batches and submits them, and
+the session models channel occupancy once per batch over a pluggable
+:class:`~repro.core.channel.Channel` backend.
 
-Timing contract: each method takes ``at`` (the target tick at which the
-host issues the request) and returns the completion tick after channel
-serialisation and controller execution.  ``stats`` accumulates the
-Table IV stall decomposition (controller vs UART).
+This class remains as the migration-period shim: every legacy method
+wraps exactly one request in a single-request transaction, so call sites
+that still thread ticks per operation (the VM fault path, the syscall
+argument reader) keep byte-for-byte and tick-for-tick identical
+behaviour.  New code should build transactions instead:
+
+    old:  t = ctl.reg_write(cpu, i, v, t, "ctxsw")   # x31, one at a time
+    new:  txn = HtpTransaction()
+          for i, v in enumerate(regs): txn.reg_write(cpu, i, v, "ctxsw")
+          txn.redirect(cpu, pc, "ctxsw")
+          t = session.submit(txn, t).done             # one wire batch
+
+``stats``/``channel``/``hfutex`` are views onto the shared session so the
+Table IV stall decomposition is identical whichever API issued the
+requests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
-from . import htp
-from .channel import UartChannel
+from .channel import Channel
 from .hfutex import HFutexCache
-from .target.cpu import CLOCK_HZ
+from .session import HtpSession, HtpTransaction, SessionStats
 
-
-@dataclass
-class ControllerStats:
-    requests: dict = field(default_factory=dict)
-    controller_cycles: int = 0
-    uart_ticks: int = 0
-
-    def count(self, name):
-        self.requests[name] = self.requests.get(name, 0) + 1
+ControllerStats = SessionStats   # legacy alias
 
 
 class FaseController:
-    """Host-side proxy for the on-FPGA FASE controller."""
+    """Host-side proxy for the on-FPGA FASE controller (legacy surface)."""
 
-    def __init__(self, target, channel: UartChannel | None = None,
+    def __init__(self, target=None, channel: Channel | None = None,
                  hfutex: HFutexCache | None = None,
-                 direct_mode: bool = False):
-        self.t = target
-        self.channel = channel or UartChannel()
-        self.hfutex = hfutex or HFutexCache(target.n_cores)
-        self.direct_mode = direct_mode   # per-port baseline (no HTP)
-        self.stats = ControllerStats()
+                 direct_mode: bool = False,
+                 session: HtpSession | None = None):
+        self.session = session or HtpSession(target, channel, hfutex,
+                                             direct_mode)
+        self.t = self.session.t
 
-    # ------------------------------------------------------------------
-    def _account(self, name: str, at: int, category: str,
-                 resp_extra: int = 0) -> int:
-        spec = htp.SPECS[name]
-        nbytes = (htp.direct_bytes(name) if self.direct_mode
-                  else spec.total_bytes) + resp_extra
-        self.stats.count(name)
-        end = self.channel.send(nbytes, at, f"htp:{name}")
-        if category:
-            self.channel.bytes_by_cat[f"sys:{category}"] += nbytes
-        self.stats.uart_ticks += max(0, end - at)
-        self.stats.controller_cycles += spec.ctrl_cycles
-        return end + (spec.ctrl_cycles if self.channel.enabled else 0)
+    # -- shared-state views ---------------------------------------------
+    @property
+    def channel(self):
+        return self.session.channel
+
+    @property
+    def hfutex(self):
+        return self.session.hfutex
+
+    @property
+    def stats(self) -> SessionStats:
+        return self.session.stats
+
+    @property
+    def direct_mode(self) -> bool:
+        return self.session.direct_mode
+
+    def _one(self, txn: HtpTransaction, at: int):
+        res = self.session.submit(txn, at)
+        return res.done, res.values[0]
 
     # ---- instruction-stream control ----------------------------------
     def redirect(self, cpu: int, pc: int, at: int, category: str = "") -> int:
-        done = self._account("Redirect", at, category)
-        self.t.redirect(cpu, pc, resume_tick=done)
-        return done
+        return self._one(HtpTransaction().redirect(cpu, pc, category),
+                         at)[0]
 
     def next_info(self, cpu: int, at: int) -> tuple[int, int, int, int]:
         """Dequeue exception info for ``cpu`` (already pending)."""
-        done = self._account("Next", at, "")
-        cause = self.t.csr_read(cpu, "mcause")
-        epc = self.t.csr_read(cpu, "mepc")
-        tval = self.t.csr_read(cpu, "mtval")
-        self.t.clear_pending(cpu)
+        done, (cause, epc, tval) = self._one(
+            HtpTransaction().next_info(cpu), at)
         return done, cause, epc, tval
 
     def set_mmu(self, cpu: int, satp: int, at: int, category: str = "") -> int:
-        self.t.set_satp(cpu, satp)
-        return self._account("SetMMU", at, category)
+        return self._one(HtpTransaction().set_mmu(cpu, satp, category),
+                         at)[0]
 
     def flush_tlb(self, cpu: int, at: int, category: str = "") -> int:
-        self.t.sfence(cpu)
-        return self._account("FlushTLB", at, category)
+        return self._one(HtpTransaction().flush_tlb(cpu, category), at)[0]
 
     def synci(self, cpu: int, at: int, category: str = "") -> int:
-        return self._account("SyncI", at, category)
+        return self._one(HtpTransaction().synci(cpu, category), at)[0]
 
     def hfutex_update(self, cpu: int, at: int) -> int:
-        return self._account("HFutex", at, "futex")
+        return self._one(HtpTransaction().hfutex_update(cpu), at)[0]
 
     # ---- word-level ---------------------------------------------------
     def reg_read(self, cpu: int, idx: int, at: int,
                  category: str = "") -> tuple[int, int]:
-        done = self._account("RegR", at, category)
-        return done, self.t.reg_read(cpu, idx)
+        return self._one(HtpTransaction().reg_read(cpu, idx, category), at)
 
     def reg_write(self, cpu: int, idx: int, val: int, at: int,
                   category: str = "") -> int:
-        self.t.reg_write(cpu, idx, val)
-        return self._account("RegW", at, category)
+        return self._one(
+            HtpTransaction().reg_write(cpu, idx, val, category), at)[0]
 
     def mem_read(self, cpu: int, pa: int, at: int,
                  category: str = "") -> tuple[int, int]:
-        done = self._account("MemR", at, category)
-        return done, self.t.mem_read_word(pa)
+        return self._one(HtpTransaction().mem_read(cpu, pa, category), at)
 
     def mem_write(self, cpu: int, pa: int, val: int, at: int,
                   category: str = "") -> int:
-        self.t.mem_write_word(pa, val)
-        return self._account("MemW", at, category)
+        return self._one(
+            HtpTransaction().mem_write(cpu, pa, val, category), at)[0]
 
     # ---- page-level -----------------------------------------------------
     def page_set(self, cpu: int, ppn: int, val: int, at: int,
                  category: str = "") -> int:
-        self.t.page_set(ppn, val)
-        return self._account("PageS", at, category)
+        return self._one(
+            HtpTransaction().page_set(cpu, ppn, val, category), at)[0]
 
     def page_copy(self, cpu: int, src: int, dst: int, at: int,
                   category: str = "") -> int:
-        self.t.page_copy(src, dst)
-        return self._account("PageCP", at, category)
+        return self._one(
+            HtpTransaction().page_copy(cpu, src, dst, category), at)[0]
 
     def page_read(self, cpu: int, ppn: int, at: int,
                   category: str = ""):
-        done = self._account("PageR", at, category)
-        return done, self.t.page_read(ppn)
+        return self._one(HtpTransaction().page_read(cpu, ppn, category),
+                         at)
 
     def page_write(self, cpu: int, ppn: int, words, at: int,
                    category: str = "") -> int:
-        self.t.page_write(ppn, words)
-        return self._account("PageW", at, category)
+        return self._one(
+            HtpTransaction().page_write(cpu, ppn, words, category), at)[0]
 
     # ---- perf ----------------------------------------------------------
     def tick(self, at: int) -> tuple[int, int]:
-        done = self._account("Tick", at, "")
-        return done, self.t.get_ticks()
+        return self._one(HtpTransaction().tick(), at)
 
     def utick(self, cpu: int, at: int) -> tuple[int, int]:
-        done = self._account("UTick", at, "")
-        return done, self.t.get_uticks(cpu)
+        return self._one(HtpTransaction().utick(cpu), at)
 
-    # ------------------------------------------------------------------
-    # Hardware futex-wake filter (Next FSM fast path, §V-B).  Peeks the
-    # syscall registers through the Reg ports (controller-local, no UART)
-    # and short-circuits a masked FUTEX_WAKE.
-    # ------------------------------------------------------------------
-    FUTEX_NR = 98
-    FUTEX_WAKE_OPS = (1, 129)   # FUTEX_WAKE, | FUTEX_PRIVATE_FLAG
-
+    # ---- controller-local fast path ------------------------------------
     def try_hfutex_fast_path(self, cpu: int, cause: int, epc: int,
                              at: int) -> int | None:
-        """Returns completion tick if handled locally, else None."""
-        if not self.hfutex.enabled or cause != 8:   # ecall from U only
-            return None
-        a7 = self.t.reg_read(cpu, 17)
-        if a7 != self.FUTEX_NR:
-            return None
-        op = self.t.reg_read(cpu, 11) & 0xFF
-        if op not in self.FUTEX_WAKE_OPS:
-            return None
-        va = self.t.reg_read(cpu, 10)
-        if not self.hfutex.lookup(cpu, va):
-            return None
-        # local handling: a0 = 0 (nobody woken), resume at epc + 4
-        self.t.reg_write(cpu, 10, 0)
-        self.t.clear_pending(cpu)
-        cycles = 16  # reg peeks + FSM, controller-local
-        self.stats.controller_cycles += cycles
-        done = at + (cycles if self.channel.enabled else 0)
-        self.t.redirect(cpu, epc + 4, resume_tick=done)
-        return done
+        return self.session.try_hfutex_fast_path(cpu, cause, epc, at)

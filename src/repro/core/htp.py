@@ -95,26 +95,57 @@ DIRECT_REGR_BYTES = 1 + 1 + 8         # req, idx -> data
 DIRECT_REGW_BYTES = 1 + 1 + 8 + 1     # req, idx, data, ack
 _LI = 8 * DIRECT_INJ_BYTES            # worst-case li: 8 injected insts
 
+# Module-level constant: this table sits on the controller hot path (one
+# lookup per accounted request in direct mode), so it is built once.
+DIRECT_BYTES: dict[str, int] = {
+    "Redirect": DIRECT_REGW_BYTES + _LI + 3 * DIRECT_INJ_BYTES,
+    "Next": 3 * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + 2,
+    "SetMMU": DIRECT_REGW_BYTES + _LI + DIRECT_INJ_BYTES,
+    "FlushTLB": DIRECT_INJ_BYTES,
+    "SyncI": DIRECT_INJ_BYTES,
+    "HFutex": DIRECT_REGW_BYTES + _LI,   # no controller cache: a RegW
+    "RegR": DIRECT_REGR_BYTES,
+    "RegW": DIRECT_REGW_BYTES,
+    "MemR": _LI + DIRECT_INJ_BYTES + DIRECT_REGR_BYTES,
+    "MemW": 2 * _LI + DIRECT_INJ_BYTES,
+    # per-page: loop of li+sd per word (no on-chip loop FSM)
+    "PageS": PAGE_WORDS * (2 * DIRECT_INJ_BYTES) + 2 * _LI,
+    "PageCP": PAGE_WORDS * (4 * DIRECT_INJ_BYTES) + 2 * _LI,
+    "PageR": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
+    "PageW": PAGE_WORDS * (DIRECT_REGW_BYTES + DIRECT_INJ_BYTES) + _LI,
+    "Tick": 10,
+    "UTick": 10,
+}
+
 
 def direct_bytes(name: str) -> int:
     """UART bytes for the same operation via raw per-port access."""
-    d = {
-        "Redirect": DIRECT_REGW_BYTES + _LI + 3 * DIRECT_INJ_BYTES,
-        "Next": 3 * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + 2,
-        "SetMMU": DIRECT_REGW_BYTES + _LI + DIRECT_INJ_BYTES,
-        "FlushTLB": DIRECT_INJ_BYTES,
-        "SyncI": DIRECT_INJ_BYTES,
-        "HFutex": DIRECT_REGW_BYTES + _LI,   # no controller cache: a RegW
-        "RegR": DIRECT_REGR_BYTES,
-        "RegW": DIRECT_REGW_BYTES,
-        "MemR": _LI + DIRECT_INJ_BYTES + DIRECT_REGR_BYTES,
-        "MemW": 2 * _LI + DIRECT_INJ_BYTES,
-        # per-page: loop of li+sd per word (no on-chip loop FSM)
-        "PageS": PAGE_WORDS * (2 * DIRECT_INJ_BYTES) + 2 * _LI,
-        "PageCP": PAGE_WORDS * (4 * DIRECT_INJ_BYTES) + 2 * _LI,
-        "PageR": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
-        "PageW": PAGE_WORDS * (DIRECT_REGW_BYTES + DIRECT_INJ_BYTES) + _LI,
-        "Tick": 10,
-        "UTick": 10,
-    }
-    return d[name]
+    return DIRECT_BYTES[name]
+
+
+def payload_bytes(name: str) -> int:
+    """Data payload a request intrinsically must move (page/word data);
+    the rest of its wire size is protocol overhead."""
+    return {"PageR": PAGE, "PageW": PAGE, "MemR": WORD, "MemW": 2 * WORD,
+            "RegR": WORD, "RegW": WORD, "Redirect": WORD, "SetMMU": WORD,
+            "Next": 3 * WORD, "Tick": WORD, "UTick": WORD,
+            "PageS": WORD, "PageCP": 0, "FlushTLB": 0, "SyncI": 0,
+            "HFutex": WORD}[name]
+
+
+def _check_specs():
+    """Internal consistency of Table II: every spec must carry at least
+    its payload, responses must match their documented sizes, and the
+    direct-mode baseline must cover the same request set."""
+    assert set(DIRECT_BYTES) == set(SPECS), "direct table out of sync"
+    assert SPECS["PageR"].resp_bytes == PAGE
+    assert SPECS["PageW"].req_bytes >= PAGE
+    assert SPECS["Next"].resp_bytes == 2 + 3 * WORD
+    for name, spec in SPECS.items():
+        assert spec.req_bytes >= 1, name               # opcode byte
+        assert spec.total_bytes >= payload_bytes(name), name
+        assert spec.ctrl_cycles >= 1, name
+        assert direct_bytes(name) > 0, name
+
+
+_check_specs()

@@ -3,13 +3,18 @@
 After reset every core is parked in privileged mode.  Execution starts with
 a Redirect into user mode; the runtime then blocks on the exception queue
 (``Next``), dispatches syscalls / page faults, applies state updates
-through HTP, and re-Redirects.  Two timing modes share all functional
-code:
+through HTP, and re-Redirects.  HTP flows through an
+:class:`~repro.core.session.HtpSession`: multi-request sequences (context
+save/restore, Next+shootdown, the final counter harvest) are built as
+:class:`~repro.core.session.HtpTransaction` batches that occupy the
+channel once, while single-shot call sites still go through the
+``FaseController`` shim.  Two timing modes share all functional code:
 
-  * ``mode="fase"``   — every HTP request serialises through the UART
-    channel model and each handled exception charges host-runtime latency;
-    the trapped core's ``stall_until`` is the completion tick (StopFetch
-    until Redirect, §III).
+  * ``mode="fase"``   — every HTP transaction serialises through the
+    selected channel backend (``link="uart" | "pcie" | "oracle"``, default
+    the paper's 8N2 UART) and each handled exception charges host-runtime
+    latency; the trapped core's ``stall_until`` is the completion tick
+    (StopFetch until Redirect, §III).
   * ``mode="oracle"`` — the full-system reference ("LiteX" role): no
     channel, instead an in-kernel cost model per syscall (KERNEL_COST).
 
@@ -23,6 +28,7 @@ from dataclasses import dataclass, field
 from .. import channel as chmod
 from ..controller import FaseController
 from ..hfutex import HFutexCache
+from ..session import HtpSession, HtpTransaction
 from ..target.cpu import CLOCK_HZ
 from . import loader as loader_mod
 from . import syscalls as sysmod
@@ -68,14 +74,18 @@ class Report:
 class FaseRuntime:
     def __init__(self, target, mode: str = "fase", baud: int = 921600,
                  hfutex: bool = True, direct_mode: bool = False,
+                 link: str | None = None,
                  host_base_us: float = 35.0, host_us_per_req: float = 12.0,
                  fault_preload: int = 16):
         assert mode in ("fase", "oracle")
         self.target = target
         self.mode = mode
-        ch = chmod.UartChannel(baud=baud, enabled=(mode == "fase"))
+        self.link = link or ("uart" if mode == "fase" else "oracle")
+        ch = chmod.make_channel(self.link, baud=baud,
+                                enabled=(mode == "fase"))
         hf = HFutexCache(target.n_cores, enabled=hfutex)
-        self.ctl = FaseController(target, ch, hf, direct_mode=direct_mode)
+        self.session = HtpSession(target, ch, hf, direct_mode=direct_mode)
+        self.ctl = FaseController(session=self.session)
         self.alloc = PageAllocator(target.mem_bytes)
         self.vm = VirtualMemory(self.ctl, self.alloc,
                                 fault_preload=fault_preload)
@@ -131,30 +141,36 @@ class FaseRuntime:
         return t + host
 
     # ---------------- context management --------------------------------
+    # The context paths are the transaction showcase (§IV-B): a save is
+    # one 31-RegR batch, a switch-in one RegW*31+Redirect batch — one
+    # channel occupancy each instead of 31.
     def save_context(self, cpu: int, thread, pc: int, t: int,
                      keep_running: bool = False) -> int:
-        regs = [0] * 32
+        txn = HtpTransaction()
         for i in range(1, 32):
-            t, regs[i] = self.ctl.reg_read(cpu, i, t, "ctxsw")
-        thread.regs = regs
+            txn.reg_read(cpu, i, "ctxsw")
+        res = self.session.submit(txn, t)
+        thread.regs = [0] + list(res.values)
         thread.pc = pc
-        return t
+        return res.done
 
     def switch_in(self, cpu: int, thread, t: int) -> int:
+        txn = HtpTransaction()
         if self.ctl.hfutex.clear_core(cpu):
-            t = self.ctl.hfutex_update(cpu, t)
+            txn.hfutex_update(cpu)
         if thread.wake_value is not None:
             thread.regs[10] = thread.wake_value & ((1 << 64) - 1)
             thread.wake_value = None
         if thread.pending_signals and thread.saved_sigctx is None:
             self._setup_signal_frame(thread)
         for i in range(1, 32):
-            t = self.ctl.reg_write(cpu, i, thread.regs[i], t, "ctxsw")
+            txn.reg_write(cpu, i, thread.regs[i], "ctxsw")
         if self.mode == "oracle":
             kc = sysmod.KERNEL_COST["ctx_switch"]
             self.stats["kernel_ticks"] += kc
             t += kc
-        t = self.ctl.redirect(cpu, thread.pc, t, "ctxsw")
+        txn.redirect(cpu, thread.pc, "ctxsw")
+        t = self.session.submit(txn, t).done
         self.sched.assign(cpu, thread.tid)
         self.sched.ctx_switches += 1
         return t
@@ -178,9 +194,11 @@ class FaseRuntime:
                     for s in thread.pending_signals):
             t = self.save_context(cpu, thread, pc, t)
             self._setup_signal_frame(thread)
+            txn = HtpTransaction()
             for i in range(1, 32):
-                t = self.ctl.reg_write(cpu, i, thread.regs[i], t, "signal")
-            t = self.ctl.redirect(cpu, thread.pc, t, "signal")
+                txn.reg_write(cpu, i, thread.regs[i], "signal")
+            txn.redirect(cpu, thread.pc, "signal")
+            self.session.submit(txn, t)
             return
         self.ctl.redirect(cpu, pc, t, "redirect")
 
@@ -256,10 +274,14 @@ class FaseRuntime:
         if done is not None:
             self.stats["hfutex_hits"] += 1
             return
-        t, cause, epc, tval = self.ctl.next_info(cpu, now)
-        if cpu in self.vm.pending_flush:
-            t = self.ctl.flush_tlb(cpu, t, "shootdown")
+        # Next (+ a lazily-owed TLB shootdown) in one transaction
+        txn = HtpTransaction().next_info(cpu)
+        flush_owed = cpu in self.vm.pending_flush
+        if flush_owed:
+            txn.flush_tlb(cpu, "shootdown")
             self.vm.pending_flush.discard(cpu)
+        res = self.session.submit(txn, now)
+        t, (cause, epc, tval) = res.done, res.values[0]
         if cause == 8:        # ecall from U
             sysmod.dispatch(self, cpu, thread, epc, t)
             return
@@ -313,12 +335,12 @@ class FaseRuntime:
         return self.finish()
 
     def finish(self) -> Report:
-        t = self.ctl.channel.busy_until
-        t, ticks = self.ctl.tick(t)
-        uticks = []
+        # final counter harvest: Tick + per-core UTick as one transaction
+        txn = HtpTransaction().tick()
         for c in range(self.target.n_cores):
-            t, u = self.ctl.utick(c, t)
-            uticks.append(u)
+            txn.utick(c)
+        res = self.session.submit(txn, self.ctl.channel.busy_until)
+        uticks = list(res.values[1:])
         rep = Report(
             ticks=self.target.get_ticks(),
             uticks=uticks,

@@ -1,0 +1,277 @@
+"""Transaction-oriented HTP session layer (paper §IV-B/§IV-C, scaled).
+
+FASE's survival trick on a low-bandwidth, high-latency link is
+*consolidation*: many per-port operations become one HTP request, and many
+HTP requests become one wire transaction.  This module is the host-side
+API for the second half:
+
+  * :class:`HtpRequest`     — one typed request from Table II,
+  * :class:`HtpTransaction` — an ordered batch of requests built by the
+    runtime/serving layers (31 RegR of a context save, RegW×31 + Redirect
+    of a context switch, ...),
+  * :class:`HtpSession`     — submits a transaction: coalesces its wire
+    bytes, models channel occupancy **once per batch** through the
+    pluggable :class:`~repro.core.channel.Channel` backend, applies each
+    request's documented execution pattern to the target, and returns
+    per-request completion ticks.
+
+Timing model: a transaction's bytes stream back-to-back from
+``channel.begin(at)``; request *i* completes after its byte prefix has
+serialised and the controller has executed patterns 1..i
+(``ctrl_cycles`` accumulate).  On a UART this is tick-identical to
+issuing the requests one by one (the link is the bottleneck and the old
+per-method API serialised everything anyway), while on a
+latency-dominated link (PCIe) the per-transaction setup cost is paid once
+per batch — which is exactly why the API is transaction-shaped.
+
+``FaseController`` (:mod:`repro.core.controller`) remains as a thin
+one-request-per-transaction compatibility shim over this session.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from . import htp
+from .channel import Channel, UartChannel
+from .hfutex import HFutexCache
+
+
+@dataclass(frozen=True)
+class HtpRequest:
+    """One typed HTP request (Table II row) inside a transaction."""
+
+    op: str                       # key into htp.SPECS
+    cpu: int = 0
+    args: tuple = ()
+    category: str = ""            # secondary "sys:<cat>" accounting
+    nbytes: int | None = None     # wire-size override (serving analogues)
+
+    def wire_bytes(self, direct: bool = False) -> int:
+        if self.nbytes is not None:
+            return self.nbytes
+        return htp.DIRECT_BYTES[self.op] if direct \
+            else htp.SPECS[self.op].total_bytes
+
+    @property
+    def ctrl_cycles(self) -> int:
+        return htp.SPECS[self.op].ctrl_cycles
+
+
+class HtpTransaction:
+    """An ordered list of HTP requests submitted as one wire batch.
+
+    Builder methods append a typed request and return ``self`` so call
+    sites can chain; ``submit`` through an :class:`HtpSession` returns a
+    :class:`TransactionResult` aligned with the request order.
+    """
+
+    def __init__(self, requests: list[HtpRequest] | None = None):
+        self.requests: list[HtpRequest] = list(requests or ())
+
+    def __len__(self):
+        return len(self.requests)
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    def add(self, req: HtpRequest) -> "HtpTransaction":
+        self.requests.append(req)
+        return self
+
+    # -- typed builders (Table II) --------------------------------------
+    def redirect(self, cpu, pc, category=""):
+        return self.add(HtpRequest("Redirect", cpu, (pc,), category))
+
+    def next_info(self, cpu):
+        return self.add(HtpRequest("Next", cpu))
+
+    def set_mmu(self, cpu, satp, category=""):
+        return self.add(HtpRequest("SetMMU", cpu, (satp,), category))
+
+    def flush_tlb(self, cpu, category=""):
+        return self.add(HtpRequest("FlushTLB", cpu, (), category))
+
+    def synci(self, cpu, category=""):
+        return self.add(HtpRequest("SyncI", cpu, (), category))
+
+    def hfutex_update(self, cpu):
+        return self.add(HtpRequest("HFutex", cpu, (), "futex"))
+
+    def reg_read(self, cpu, idx, category=""):
+        return self.add(HtpRequest("RegR", cpu, (idx,), category))
+
+    def reg_write(self, cpu, idx, val, category=""):
+        return self.add(HtpRequest("RegW", cpu, (idx, val), category))
+
+    def mem_read(self, cpu, pa, category=""):
+        return self.add(HtpRequest("MemR", cpu, (pa,), category))
+
+    def mem_write(self, cpu, pa, val, category=""):
+        return self.add(HtpRequest("MemW", cpu, (pa, val), category))
+
+    def page_set(self, cpu, ppn, val, category=""):
+        return self.add(HtpRequest("PageS", cpu, (ppn, val), category))
+
+    def page_copy(self, cpu, src, dst, category=""):
+        return self.add(HtpRequest("PageCP", cpu, (src, dst), category))
+
+    def page_read(self, cpu, ppn, category=""):
+        return self.add(HtpRequest("PageR", cpu, (ppn,), category))
+
+    def page_write(self, cpu, ppn, words, category=""):
+        return self.add(HtpRequest("PageW", cpu, (ppn, words), category))
+
+    def tick(self):
+        return self.add(HtpRequest("Tick"))
+
+    def utick(self, cpu):
+        return self.add(HtpRequest("UTick", cpu))
+
+    # -- wire size -------------------------------------------------------
+    def wire_bytes(self, direct: bool = False) -> int:
+        return sum(r.wire_bytes(direct) for r in self.requests)
+
+
+@dataclass
+class TransactionResult:
+    """Per-request completion ticks + response values, request-ordered."""
+
+    done: int                    # completion tick of the whole batch
+    ticks: list = field(default_factory=list)
+    values: list = field(default_factory=list)
+
+    def __iter__(self):
+        return iter(zip(self.ticks, self.values))
+
+
+@dataclass
+class SessionStats:
+    """Table IV stall decomposition (controller vs link)."""
+
+    requests: dict = field(default_factory=dict)
+    transactions: int = 0
+    controller_cycles: int = 0
+    uart_ticks: int = 0          # historical name: link wait+wire ticks
+
+    def count(self, name):
+        self.requests[name] = self.requests.get(name, 0) + 1
+
+
+class HtpSession:
+    """Host endpoint of the Host-Target Protocol over one channel."""
+
+    def __init__(self, target, channel: Channel | None = None,
+                 hfutex: HFutexCache | None = None,
+                 direct_mode: bool = False):
+        self.t = target
+        self.channel = channel or UartChannel()
+        self.hfutex = hfutex or HFutexCache(target.n_cores)
+        self.direct_mode = direct_mode   # per-port baseline (no HTP)
+        self.stats = SessionStats()
+
+    # ------------------------------------------------------------------
+    def submit(self, txn: HtpTransaction, at: int) -> TransactionResult:
+        """Send ``txn`` no earlier than tick ``at``; apply every request's
+        execution pattern to the target in order."""
+        ch = self.channel
+        self.stats.transactions += 1
+        start = ch.begin(at)
+        enabled = ch.enabled
+        cum_bytes = 0
+        cum_cycles = 0
+        result = TransactionResult(done=at)
+        for req in txn.requests:
+            nbytes = req.wire_bytes(self.direct_mode)
+            ch.account(nbytes, f"htp:{req.op}")
+            if req.category:
+                ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
+            self.stats.count(req.op)
+            self.stats.controller_cycles += req.ctrl_cycles
+            cum_bytes += nbytes
+            if enabled:
+                cum_cycles += req.ctrl_cycles
+                done = start + ch.ticks_for_bytes(cum_bytes) + cum_cycles
+            else:
+                done = at
+            result.ticks.append(done)
+            result.values.append(self._apply(req, done))
+        ch.end(start, cum_bytes)
+        if enabled:
+            wire_done = start + ch.ticks_for_bytes(cum_bytes)
+            self.stats.uart_ticks += max(0, wire_done - at)
+        result.done = result.ticks[-1] if result.ticks else at
+        return result
+
+    # ------------------------------------------------------------------
+    def _apply(self, req: HtpRequest, done: int):
+        """Apply one request's documented effect; returns its response."""
+        t = self.t
+        op, cpu, a = req.op, req.cpu, req.args
+        if op == "Redirect":
+            t.redirect(cpu, a[0], resume_tick=done)
+        elif op == "Next":
+            cause = t.csr_read(cpu, "mcause")
+            epc = t.csr_read(cpu, "mepc")
+            tval = t.csr_read(cpu, "mtval")
+            t.clear_pending(cpu)
+            return (cause, epc, tval)
+        elif op == "SetMMU":
+            t.set_satp(cpu, a[0])
+        elif op == "FlushTLB":
+            t.sfence(cpu)
+        elif op in ("SyncI", "HFutex"):
+            pass                      # mask/ifence effects are host-side
+        elif op == "RegR":
+            return t.reg_read(cpu, a[0])
+        elif op == "RegW":
+            t.reg_write(cpu, a[0], a[1])
+        elif op == "MemR":
+            return t.mem_read_word(a[0])
+        elif op == "MemW":
+            t.mem_write_word(a[0], a[1])
+        elif op == "PageS":
+            t.page_set(a[0], a[1])
+        elif op == "PageCP":
+            t.page_copy(a[0], a[1])
+        elif op == "PageR":
+            return t.page_read(a[0])
+        elif op == "PageW":
+            t.page_write(a[0], a[1])
+        elif op == "Tick":
+            return t.get_ticks()
+        elif op == "UTick":
+            return t.get_uticks(cpu)
+        else:
+            raise KeyError(f"unknown HTP request {op!r}")
+        return None
+
+    # ------------------------------------------------------------------
+    # Hardware futex-wake filter (Next FSM fast path, §V-B).  Peeks the
+    # syscall registers through the Reg ports (controller-local, no link
+    # traffic) and short-circuits a masked FUTEX_WAKE.
+    # ------------------------------------------------------------------
+    FUTEX_NR = 98
+    FUTEX_WAKE_OPS = (1, 129)   # FUTEX_WAKE, | FUTEX_PRIVATE_FLAG
+
+    def try_hfutex_fast_path(self, cpu: int, cause: int, epc: int,
+                             at: int) -> int | None:
+        """Returns completion tick if handled locally, else None."""
+        if not self.hfutex.enabled or cause != 8:   # ecall from U only
+            return None
+        a7 = self.t.reg_read(cpu, 17)
+        if a7 != self.FUTEX_NR:
+            return None
+        op = self.t.reg_read(cpu, 11) & 0xFF
+        if op not in self.FUTEX_WAKE_OPS:
+            return None
+        va = self.t.reg_read(cpu, 10)
+        if not self.hfutex.lookup(cpu, va):
+            return None
+        # local handling: a0 = 0 (nobody woken), resume at epc + 4
+        self.t.reg_write(cpu, 10, 0)
+        self.t.clear_pending(cpu)
+        cycles = 16  # reg peeks + FSM, controller-local
+        self.stats.controller_cycles += cycles
+        done = at + (cycles if self.channel.enabled else 0)
+        self.t.redirect(cpu, epc + 4, resume_tick=done)
+        return done

@@ -1,0 +1,24 @@
+"""The FASE target processor package.
+
+Two behaviourally-identical implementations of the RV64IMA target core sit
+behind the minimal CPU interface of paper Table I:
+
+  * :mod:`repro.core.target.cpu`   — the jitted XLA state model (the
+    "FPGA" role: compiled, fast, state lives in device buffers),
+  * :mod:`repro.core.target.pysim` — the pure-Python twin used for
+    differential testing and as a lightweight default target.
+
+Shared pieces:
+
+  * :mod:`repro.core.target.isa` — encodings, PTE bits, and the Sv39
+    constants both implementations (and the assembler) agree on,
+  * :mod:`repro.core.target.asm` — a small two-pass RV64IMA assembler
+    that turns the workload sources into loadable :class:`Image`\\ s.
+
+The execution model is a 1-IPC in-order multicore: every global tick each
+non-parked, non-pending core whose ``stall_until`` has passed retires one
+instruction, cores stepping in core-index order within the tick.  Both
+implementations follow this rule exactly, which is what makes them
+bit-identical under atomics and multicore interleaving (see
+``tests/test_cpu_differential.py``).
+"""

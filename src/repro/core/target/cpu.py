@@ -1,0 +1,446 @@
+"""The jitted XLA target CPU model (the "FPGA" role).
+
+State is a NamedTuple of device arrays; :func:`run_chunk` is a compiled
+``while_loop`` that retires one instruction per non-stalled core per global
+tick (cores stepping in core-index order within a tick) until a core
+raises an exception, every core is parked, or the cycle budget runs out.
+When every live core is stalled on ``stall_until`` the loop fast-forwards
+time to the next wake-up in one step — channel-induced stalls cost no host
+work.
+
+Semantics are defined to be bit-identical to the pure-Python twin
+(:mod:`repro.core.target.pysim`); keep the two in lock-step.  The word-
+and page-granular helpers at the bottom are the device-side halves of the
+HTP data-access requests (``MemR/MemW/PageS/PageCP/PageR/PageW``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the target is a 64-bit CPU
+
+import jax.numpy as jnp              # noqa: E402
+from jax import lax                  # noqa: E402
+
+from . import isa                    # noqa: E402
+
+CLOCK_HZ = 100_000_000
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+I64 = jnp.int64
+_RES_INVALID = (1 << 64) - 1
+_INT64_MIN = -(1 << 63)
+
+
+def _u(x):
+    return jnp.uint64(x)
+
+
+class CpuState(NamedTuple):
+    regs: jax.Array          # (nc, 32) u64
+    pc: jax.Array            # (nc,) u64
+    priv: jax.Array          # (nc,) u32 — 0 user, 3 parked
+    pending: jax.Array       # (nc,) bool
+    stall_until: jax.Array   # (nc,) u64
+    satp: jax.Array          # (nc,) u64
+    mcause: jax.Array        # (nc,) u64
+    mepc: jax.Array          # (nc,) u64
+    mtval: jax.Array         # (nc,) u64
+    res: jax.Array           # (nc,) u64 LR reservation pa, ~0 = invalid
+    mem: jax.Array           # (mem_bytes // 8,) u64
+    ticks: jax.Array         # () u64
+    uticks: jax.Array        # (nc,) u64
+    instret: jax.Array       # (nc,) u64
+
+
+def make_state(n_cores: int, mem_bytes: int) -> CpuState:
+    assert mem_bytes & (mem_bytes - 1) == 0, "mem_bytes must be pow2"
+    nc = n_cores
+    z = lambda: jnp.zeros((nc,), U64)       # noqa: E731
+    return CpuState(
+        regs=jnp.zeros((nc, 32), U64), pc=z(),
+        priv=jnp.full((nc,), 3, U32), pending=jnp.zeros((nc,), bool),
+        stall_until=z(), satp=z(), mcause=z(), mepc=z(), mtval=z(),
+        res=jnp.full((nc,), _RES_INVALID, U64),
+        mem=jnp.zeros((mem_bytes // 8,), U64),
+        ticks=_u(0), uticks=z(), instret=z(),
+    )
+
+
+def _sx(v, bits):
+    """Sign-extend the low ``bits`` of u64 ``v`` (wrapping arithmetic)."""
+    m = _u(1 << (bits - 1))
+    return (v ^ m) - m
+
+
+def _translate(mem, satp, va, want_write, want_exec, mask):
+    """Sv39 walk; returns (pa, fault).  Bare when satp mode != 8."""
+    bare = (satp >> _u(60)) != _u(8)
+    need = _u(isa.PTE_U) | jnp.where(
+        want_exec, _u(isa.PTE_X),
+        jnp.where(want_write, _u(isa.PTE_W), _u(isa.PTE_R)))
+    a = (satp & _u((1 << 44) - 1)) << _u(12)
+    done = jnp.bool_(False)
+    fault = jnp.bool_(False)
+    pa = _u(0)
+    for level in (2, 1, 0):
+        idx = (va >> _u(12 + 9 * level)) & _u(0x1FF)
+        pte = mem[((a + idx * _u(8)) & mask) >> _u(3)]
+        valid = (pte & _u(isa.PTE_V)) != 0
+        leaf = valid & ((pte & _u(isa.PTE_R | isa.PTE_X)) != 0)
+        perm_ok = (pte & need) == need
+        off_mask = _u((1 << (12 + 9 * level)) - 1)
+        leaf_pa = (((pte >> _u(10)) << _u(12)) | (va & off_mask)) & mask
+        take = ~done
+        fault = fault | (take & (~valid | (leaf & ~perm_ok)))
+        pa = jnp.where(take & leaf & perm_ok, leaf_pa, pa)
+        done = done | (take & (~valid | leaf))
+        a = jnp.where(take & valid & ~leaf, (pte >> _u(10)) << _u(12), a)
+    fault = (fault | ~done) & ~bare
+    pa = jnp.where(bare, va, pa) & mask
+    return pa, fault
+
+
+def _mulhu(a, b):
+    m32 = _u(0xFFFFFFFF)
+    al, ah = a & m32, a >> _u(32)
+    bl, bh = b & m32, b >> _u(32)
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    mid = (ll >> _u(32)) + (lh & m32) + (hl & m32)
+    return ah * bh + (lh >> _u(32)) + (hl >> _u(32)) + (mid >> _u(32))
+
+
+def _sdiv_parts(a, b):
+    """Signed div/rem with RISC-V div0/overflow semantics (64-bit)."""
+    sa = a.astype(I64)
+    sb = b.astype(I64)
+    div0 = b == 0
+    ovf = (sa == _INT64_MIN) & (sb == -1)
+    den = jnp.where(div0 | ovf, jnp.int64(1), sb)
+    q = lax.div(sa, den)
+    r = lax.rem(sa, den)
+    q = jnp.where(div0, jnp.int64(-1), jnp.where(ovf, sa, q))
+    r = jnp.where(div0, sa, jnp.where(ovf, jnp.int64(0), r))
+    return q.astype(U64), r.astype(U64)
+
+
+def _udiv_parts(a, b):
+    div0 = b == 0
+    den = jnp.where(div0, _u(1), b)
+    q = jnp.where(div0, _u(_RES_INVALID), a // den)
+    r = jnp.where(div0, a, a % den)
+    return q, r
+
+
+def _alu64(f3, is_sub, is_sra, is_m, a, b):
+    sa = a.astype(I64)
+    sb = b.astype(I64)
+    sh = b & _u(63)
+    base = jnp.select(
+        [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5, f3 == 6],
+        [jnp.where(is_sub, a - b, a + b),
+         a << sh,
+         (sa < sb).astype(U64),
+         (a < b).astype(U64),
+         a ^ b,
+         jnp.where(is_sra, (sa >> sh.astype(I64)).astype(U64), a >> sh),
+         a | b],
+        a & b)
+    q, r = _sdiv_parts(a, b)
+    uq, ur = _udiv_parts(a, b)
+    mulhu = _mulhu(a, b)
+    mulh = mulhu - jnp.where(sa < 0, b, _u(0)) - jnp.where(sb < 0, a, _u(0))
+    mulhsu = mulhu - jnp.where(sa < 0, b, _u(0))
+    m = jnp.select(
+        [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5, f3 == 6],
+        [a * b, mulh, mulhsu, mulhu, q, uq, r],
+        ur)
+    return jnp.where(is_m, m, base)
+
+
+def _alu32(f3, is_sub, is_sra, is_m, a, b):
+    m32 = _u(0xFFFFFFFF)
+    a32 = a & m32
+    b32 = b & m32
+    sa = _sx(a32, 32).astype(I64)
+    sb = _sx(b32, 32).astype(I64)
+    sh = b & _u(31)
+    base = jnp.select(
+        [f3 == 0, f3 == 1],
+        [jnp.where(is_sub, a - b, a + b),
+         a32 << sh],
+        jnp.where(is_sra, (sa >> sh.astype(I64)).astype(U64), a32 >> sh))
+    div0 = b32 == 0
+    ovf = (sa == -(1 << 31)) & (sb == -1)
+    den = jnp.where(div0 | ovf, jnp.int64(1), sb)
+    q = jnp.where(div0, jnp.int64(-1),
+                  jnp.where(ovf, sa, lax.div(sa, den))).astype(U64)
+    r = jnp.where(div0, sa,
+                  jnp.where(ovf, jnp.int64(0), lax.rem(sa, den))).astype(U64)
+    uden = jnp.where(div0, _u(1), b32)
+    uq = jnp.where(div0, _u(_RES_INVALID), a32 // uden)
+    ur = jnp.where(div0, a32, a32 % uden)
+    m = jnp.select([f3 == 0, f3 == 4, f3 == 5, f3 == 6],
+                   [a32 * b32, q, uq, r], ur)
+    return _sx(jnp.where(is_m, m, base) & m32, 32)
+
+
+def _exec_one(st: CpuState, c: int, nc: int, mask) -> CpuState:
+    mem = st.mem
+    pc = st.pc[c]
+    satp = st.satp[c]
+    f_ = jnp.bool_(False)
+
+    ipa, ifault = _translate(mem, satp, pc, f_, jnp.bool_(True), mask)
+    iword = mem[ipa >> _u(3)]
+    inst = (iword >> (((ipa >> _u(2)) & _u(1)) * _u(32))) & _u(0xFFFFFFFF)
+
+    op = inst & _u(0x7F)
+    rd = (inst >> _u(7)) & _u(0x1F)
+    f3 = (inst >> _u(12)) & _u(7)
+    rs1 = (inst >> _u(15)) & _u(0x1F)
+    rs2 = (inst >> _u(20)) & _u(0x1F)
+    f7 = inst >> _u(25)
+    imm_i = _sx(inst >> _u(20), 12)
+    imm_s = _sx(((inst >> _u(25)) << _u(5)) | rd, 12)
+    imm_b = _sx((((inst >> _u(8)) & _u(0xF)) << _u(1)) |
+                (((inst >> _u(25)) & _u(0x3F)) << _u(5)) |
+                (((inst >> _u(7)) & _u(1)) << _u(11)) |
+                ((inst >> _u(31)) << _u(12)), 13)
+    imm_u = _sx(inst & _u(0xFFFFF000), 32)
+    imm_j = _sx((((inst >> _u(21)) & _u(0x3FF)) << _u(1)) |
+                (((inst >> _u(20)) & _u(1)) << _u(11)) |
+                (((inst >> _u(12)) & _u(0xFF)) << _u(12)) |
+                ((inst >> _u(31)) << _u(20)), 21)
+
+    regs_c = st.regs[c]
+    a = regs_c[rs1]
+    b = regs_c[rs2]
+
+    is_load = op == _u(isa.OP_LOAD)
+    is_fence = op == _u(isa.OP_MISC_MEM)
+    is_opimm = op == _u(isa.OP_IMM)
+    is_auipc = op == _u(isa.OP_AUIPC)
+    is_opimm32 = op == _u(isa.OP_IMM_32)
+    is_store = op == _u(isa.OP_STORE)
+    is_amo = op == _u(isa.OP_AMO)
+    is_op = op == _u(isa.OP_OP)
+    is_lui = op == _u(isa.OP_LUI)
+    is_op32 = op == _u(isa.OP_OP_32)
+    is_branch = op == _u(isa.OP_BRANCH)
+    is_jalr = op == _u(isa.OP_JALR)
+    is_jal = op == _u(isa.OP_JAL)
+    is_system = op == _u(isa.OP_SYSTEM)
+    is_ecall = is_system & (inst == _u(isa.INST_ECALL))
+    is_ebreak = is_system & (inst == _u(isa.INST_EBREAK))
+    illegal = ~(is_load | is_fence | is_opimm | is_auipc | is_opimm32 |
+                is_store | is_amo | is_op | is_lui | is_op32 | is_branch |
+                is_jalr | is_jal | is_ecall | is_ebreak)
+
+    # ---- ALU ----------------------------------------------------------
+    reg_form = is_op | is_op32
+    bop = jnp.where(reg_form, b, imm_i)
+    is_m = reg_form & (f7 == _u(1))
+    is_sub = reg_form & (f7 == _u(0x20)) & (f3 == _u(0))
+    is_sra = jnp.where(reg_form, f7 == _u(0x20),
+                       (inst >> _u(30)) & _u(1) != 0) & (f3 == _u(5))
+    alu_w = _alu64(f3, is_sub, is_sra, is_m, a, bop)
+    alu_w32 = _alu32(f3, is_sub, is_sra, is_m, a, bop)
+
+    # ---- data memory access -------------------------------------------
+    funct5 = f7 >> _u(2)
+    is_lr = is_amo & (funct5 == _u(isa.AMO_LR))
+    is_sc = is_amo & (funct5 == _u(isa.AMO_SC))
+    dva = jnp.where(is_amo, a,
+                    a + jnp.where(is_store, imm_s, imm_i))
+    is_memop = is_load | is_store | is_amo
+    want_w = is_store | (is_amo & ~is_lr)
+    dpa, dfault = _translate(mem, satp, dva, want_w, f_, mask)
+    szb = jnp.where(is_amo,
+                    jnp.where(f3 == _u(2), _u(4), _u(8)),
+                    _u(1) << (f3 & _u(3)))
+    misal = is_memop & ((dva & (szb - _u(1))) != 0)
+
+    dword = mem[dpa >> _u(3)]
+    dshift = (dpa & _u(7)) << _u(3)
+    raw = dword >> dshift
+    sizemask = jnp.select([szb == _u(1), szb == _u(2), szb == _u(4)],
+                          [_u(0xFF), _u(0xFFFF), _u(0xFFFFFFFF)],
+                          _u(_RES_INVALID))
+    rawv = raw & sizemask
+    uns = (f3 & _u(4)) != 0
+    loaded = jnp.select(
+        [szb == _u(1), szb == _u(2), szb == _u(4)],
+        [jnp.where(uns, rawv, _sx(rawv, 8)),
+         jnp.where(uns, rawv, _sx(rawv, 16)),
+         jnp.where(uns, rawv, _sx(rawv, 32))],
+        rawv)
+
+    # ---- AMO ----------------------------------------------------------
+    amo_w = f3 == _u(2)
+    amo_old = rawv                       # width-masked old value
+    amo_b = b & sizemask
+    s_old = jnp.where(amo_w, _sx(amo_old, 32), amo_old).astype(I64)
+    s_b = jnp.where(amo_w, _sx(amo_b, 32), amo_b).astype(I64)
+    amo_new = jnp.select(
+        [funct5 == _u(isa.AMO_SWAP), funct5 == _u(isa.AMO_ADD),
+         funct5 == _u(isa.AMO_XOR), funct5 == _u(isa.AMO_AND),
+         funct5 == _u(isa.AMO_OR), funct5 == _u(isa.AMO_MIN),
+         funct5 == _u(isa.AMO_MAX), funct5 == _u(isa.AMO_MINU)],
+        [amo_b, amo_old + amo_b, amo_old ^ amo_b, amo_old & amo_b,
+         amo_old | amo_b,
+         jnp.where(s_old < s_b, amo_old, amo_b),
+         jnp.where(s_old > s_b, amo_old, amo_b),
+         jnp.where(amo_old < amo_b, amo_old, amo_b)],
+        jnp.where(amo_old > amo_b, amo_old, amo_b))
+    sc_ok = is_sc & (st.res[c] == dpa)
+    amo_rdval = jnp.where(
+        is_sc, jnp.where(sc_ok, _u(0), _u(1)),
+        jnp.where(amo_w, _sx(amo_old, 32), amo_old))
+
+    # ---- traps --------------------------------------------------------
+    ma_cause = jnp.where(is_load | is_lr, _u(4), _u(6))
+    pf_cause = jnp.where(want_w, _u(15), _u(13))
+    dtrap = is_memop & (misal | dfault)
+    trapped = ifault | illegal | is_ecall | is_ebreak | dtrap
+    cause = jnp.where(
+        ifault, _u(12),
+        jnp.where(illegal, _u(2),
+                  jnp.where(is_ecall, _u(8),
+                            jnp.where(is_ebreak, _u(3),
+                                      jnp.where(misal, ma_cause,
+                                                pf_cause)))))
+    tval = jnp.where(
+        ifault, pc,
+        jnp.where(illegal, inst,
+                  jnp.where(is_ecall | is_ebreak, _u(0), dva)))
+
+    # ---- memory commit -------------------------------------------------
+    commit = ~trapped & (is_store |
+                         (is_amo & ~is_lr & (~is_sc | sc_ok)))
+    sval = jnp.where(is_store | is_sc, b, amo_new)
+    wmask = sizemask << dshift
+    new_word = (dword & ~wmask) | ((sval << dshift) & wmask)
+    widx = jnp.where(commit, dpa >> _u(3), _u(0))
+    wold = mem[widx]
+    new_mem = mem.at[widx].set(jnp.where(commit, new_word, wold))
+
+    # ---- reservations ---------------------------------------------------
+    line = dpa & ~_u(7)
+    others = jnp.arange(nc) != c
+    res = jnp.where(others & commit & ((st.res & ~_u(7)) == line),
+                    _u(_RES_INVALID), st.res)
+    own = jnp.where(
+        trapped, st.res[c],
+        jnp.where(is_lr, dpa,
+                  jnp.where(is_sc, _u(_RES_INVALID), st.res[c])))
+    res = res.at[c].set(own)
+
+    # ---- next pc / register writeback ----------------------------------
+    sa = a.astype(I64)
+    sb64 = b.astype(I64)
+    taken = is_branch & jnp.select(
+        [f3 == _u(0), f3 == _u(1), f3 == _u(4), f3 == _u(5), f3 == _u(6)],
+        [a == b, a != b, sa < sb64, sa >= sb64, a < b],
+        a >= b)
+    next_pc = pc + _u(4)
+    next_pc = jnp.where(taken, pc + imm_b, next_pc)
+    next_pc = jnp.where(is_jal, pc + imm_j, next_pc)
+    next_pc = jnp.where(is_jalr, (a + imm_i) & ~_u(1), next_pc)
+
+    wval = jnp.where(is_opimm | is_op, alu_w, _u(0))
+    wval = jnp.where(is_opimm32 | is_op32, alu_w32, wval)
+    wval = jnp.where(is_load, loaded, wval)
+    wval = jnp.where(is_lui, imm_u, wval)
+    wval = jnp.where(is_auipc, pc + imm_u, wval)
+    wval = jnp.where(is_jal | is_jalr, pc + _u(4), wval)
+    wval = jnp.where(is_amo, amo_rdval, wval)
+    wen = (is_opimm | is_op | is_opimm32 | is_op32 | is_load | is_lui |
+           is_auipc | is_jal | is_jalr | is_amo) & (rd != 0) & ~trapped
+    new_regs = st.regs.at[c, rd].set(jnp.where(wen, wval, st.regs[c, rd]))
+
+    retired = ~trapped
+    return st._replace(
+        regs=new_regs,
+        pc=st.pc.at[c].set(jnp.where(trapped, pc, next_pc)),
+        pending=st.pending.at[c].set(trapped),
+        mcause=jnp.where(trapped, st.mcause.at[c].set(cause), st.mcause),
+        mepc=jnp.where(trapped, st.mepc.at[c].set(pc), st.mepc),
+        mtval=jnp.where(trapped, st.mtval.at[c].set(tval), st.mtval),
+        res=res,
+        mem=new_mem,
+        uticks=st.uticks.at[c].add(retired.astype(U64)),
+        instret=st.instret.at[c].add(retired.astype(U64)),
+    )
+
+
+@partial(jax.jit, static_argnums=(1, 2), donate_argnums=(0,))
+def run_chunk(st: CpuState, n_cores: int, mem_bytes: int,
+              max_cycles) -> CpuState:
+    nc = n_cores
+    mask = _u(mem_bytes - 1)
+    limit = jnp.asarray(max_cycles, U64)
+
+    def cond(carry):
+        st, cycles = carry
+        return ((cycles < limit) & ~jnp.any(st.pending) &
+                jnp.any(st.priv != 3))
+
+    def body(carry):
+        st, cycles = carry
+        active = st.priv != 3
+        can = active & (st.ticks >= st.stall_until)
+
+        def do_exec(st):
+            for c in range(nc):
+                runnable = ((st.priv[c] == 0) & ~st.pending[c] &
+                            (st.ticks >= st.stall_until[c]))
+                st = lax.cond(runnable,
+                              lambda s: _exec_one(s, c, nc, mask),
+                              lambda s: s, st)
+            return st._replace(ticks=st.ticks + _u(1)), _u(1)
+
+        def do_skip(st):
+            gaps = jnp.where(active, st.stall_until - st.ticks,
+                             _u(_RES_INVALID))
+            gap = jnp.minimum(jnp.min(gaps), limit - cycles)
+            return st._replace(ticks=st.ticks + gap), gap
+
+        st, dc = lax.cond(jnp.any(can), do_exec, do_skip, st)
+        return st, cycles + dc
+
+    st, _ = lax.while_loop(cond, body, (st, _u(0)))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Host-side word/page access (the device half of the HTP data requests)
+# ---------------------------------------------------------------------------
+def mem_write_words(mem, word_idx, vals):
+    return mem.at[jnp.asarray(word_idx)].set(
+        jnp.asarray(vals, dtype=U64))
+
+
+def page_read_words(mem, word_off):
+    return lax.dynamic_slice(mem, (jnp.asarray(word_off),), (512,))
+
+
+def page_write_words(mem, word_off, words):
+    return lax.dynamic_update_slice(
+        mem, jnp.asarray(words, dtype=U64), (jnp.asarray(word_off),))
+
+
+def page_set_words(mem, word_off, val):
+    return lax.dynamic_update_slice(
+        mem, jnp.full((512,), val, U64), (jnp.asarray(word_off),))
+
+
+def page_copy_words(mem, src_off, dst_off):
+    page = lax.dynamic_slice(mem, (jnp.asarray(src_off),), (512,))
+    return lax.dynamic_update_slice(mem, page, (jnp.asarray(dst_off),))

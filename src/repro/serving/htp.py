@@ -4,14 +4,23 @@ FASE ships Redirect/PageS/PageCP/RegW requests over a narrow UART; the
 serving engine ships exactly one dense command batch per decode step over
 the dispatch link: token overrides (Redirect analogues), block tables
 (MMU/page-table analogues), and page copy/zero lists (PageCP/PageS).
-Bytes are accounted per category so the Layer-B traffic benchmarks mirror
-the paper's Fig 13.
+
+A ``CommandBatch`` *is* an HTP transaction at pod scale:
+:meth:`CommandBatch.to_transaction` lowers it to an ordered
+:class:`~repro.core.session.HtpTransaction` of typed requests (with
+serving wire sizes overriding the Table II defaults), and
+:meth:`CommandBatch.account` books those requests' bytes per category so
+the Layer-B traffic benchmarks mirror the paper's Fig 13.  The requests
+carry the serving slot as their ``cpu`` field — decode slots are the
+paper's CPUs.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from ..core.session import HtpRequest, HtpTransaction
 
 
 @dataclass
@@ -32,7 +41,33 @@ class CommandBatch:
             block_tables=np.zeros((slots, pages), np.int32),
         )
 
+    def to_transaction(self) -> HtpTransaction:
+        """Lower to one ordered HTP transaction: token overrides are
+        Redirect analogues, block-table rows SetMMU analogues, page
+        copy/zero lists PageCP/PageS analogues.  Serving wire sizes
+        override the Table II defaults via ``nbytes``."""
+        txn = HtpTransaction()
+        row_bytes = self.block_tables.nbytes // max(
+            self.block_tables.shape[0], 1)
+        for slot in range(self.override.shape[0]):
+            if self.override[slot] >= 0:
+                txn.add(HtpRequest("Redirect", cpu=slot,
+                                   args=(int(self.override[slot]),),
+                                   category="overrides", nbytes=8))
+            txn.add(HtpRequest("SetMMU", cpu=slot,
+                               args=(self.block_tables[slot],),
+                               category="block_tables", nbytes=row_bytes))
+        for src, dst in self.page_copies:
+            txn.add(HtpRequest("PageCP", args=(src, dst),
+                               category="page_cmds", nbytes=8))
+        for page in self.page_zeros:
+            txn.add(HtpRequest("PageS", args=(page, 0),
+                               category="page_cmds", nbytes=8))
+        return txn
+
     def account(self, traffic) -> None:
+        # closed-form byte totals of to_transaction() — account() runs
+        # once per decode step, so no per-request objects here
         traffic.add("overrides", 8 * int((self.override >= 0).sum()))
         traffic.add("block_tables", self.block_tables.nbytes)
         traffic.add("page_cmds",

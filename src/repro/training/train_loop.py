@@ -73,10 +73,11 @@ def train(cfg, steps: int = 20, batch: int = 8, seq: int = 64,
             state["params"], state["opt"] = params, opt_state
         except RuntimeError as e:
             log(f"FAILURE: {e}; restarting from checkpoint")
-            latest = ckpt.latest_step() or 0
-            ckpt.wait()
+            ckpt.wait()          # let an in-flight async save land first
+            latest = ckpt.latest_step()
             state = ckpt.restore(latest, jax.eval_shape(fresh_state)) \
-                if ckpt.latest_step() is not None else fresh_state()
+                if latest is not None else fresh_state()
+            latest = latest or 0
             state["step"] = latest
             pipe.seek(latest)
             step = latest

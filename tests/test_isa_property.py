@@ -1,6 +1,9 @@
 """Property test: random ALU instruction streams agree between targets."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.interface import JaxTarget
 from repro.core.target import asm

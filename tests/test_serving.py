@@ -35,6 +35,27 @@ def test_greedy_determinism_across_batching():
     assert outs[0] == outs[1]
 
 
+def test_command_batch_account_matches_transaction():
+    """account()'s closed-form byte totals must equal the per-category
+    wire bytes of the lowered HtpTransaction."""
+    import numpy as np
+    from repro.serving.engine import TrafficStats
+    from repro.serving.htp import CommandBatch
+    cb = CommandBatch.empty(slots=3, pages=4)
+    cb.override[0] = 42
+    cb.override[2] = 7
+    cb.block_tables[:] = np.arange(12, dtype=np.int32).reshape(3, 4)
+    cb.page_copies = [(1, 2), (3, 4)]
+    cb.page_zeros = [5]
+    traffic = TrafficStats()
+    cb.account(traffic)
+    by_cat = {}
+    for req in cb.to_transaction():
+        by_cat[req.category] = by_cat.get(req.category, 0) + \
+            req.wire_bytes()
+    assert by_cat == traffic.by_cat
+
+
 def test_prefix_sharing_and_cow():
     kv = PagedKVManager(64)
     from repro.models.core import PAGE_SIZE

@@ -1,0 +1,190 @@
+"""HtpSession transactions, pluggable channel backends, and the paper's
+traffic-reduction claim measured through the new API."""
+import pytest
+
+from repro.core import htp
+from repro.core.channel import (OracleChannel, PcieChannel, UartChannel,
+                                make_channel)
+from repro.core.runtime import FaseRuntime
+from repro.core.session import HtpSession, HtpTransaction
+from repro.core.target.pysim import PySim
+from repro.core.target import asm
+from repro.core.workloads import build
+from repro.core.workloads.libc import LIBC
+
+PAGE_HEAVY = """
+main:
+    addi sp, sp, -16
+    sd ra, 8(sp)
+    li a0, 0
+    li a1, 131072
+    li a2, 3
+    li a3, 0x22
+    li a4, -1
+    li a5, 0
+    call mmap6
+    mv s0, a0
+    li t1, 0
+1:
+    li t2, 131072
+    bgeu t1, t2, 2f
+    add t3, s0, t1
+    sd t1, 0(t3)
+    li t4, 4096
+    add t1, t1, t4
+    j 1b
+2:
+    mv a0, s0
+    li a1, 131072
+    call munmap
+    li a0, 0
+    ld ra, 8(sp)
+    addi sp, sp, 16
+    ret
+"""
+
+
+# ---------------------------------------------------------------------------
+# Traffic-reduction claim (paper §IV-B)
+# ---------------------------------------------------------------------------
+def test_page_group_overhead_reduction_95pct():
+    """Every page-group request must cut *protocol overhead* (wire bytes
+    beyond the intrinsic data payload) by >=95% vs the per-port baseline."""
+    for name, spec in htp.SPECS.items():
+        if spec.group != "page":
+            continue
+        payload = htp.payload_bytes(name)
+        overhead = spec.total_bytes - payload
+        direct_overhead = htp.direct_bytes(name) - payload
+        assert overhead <= 0.05 * direct_overhead, name
+
+
+def test_end_to_end_page_heavy_reduction_95pct():
+    """A page-fault/munmap-churn workload must see >=95% total traffic
+    reduction end-to-end through the session API."""
+    tot = {}
+    for direct in (False, True):
+        rt = FaseRuntime(PySim(1, 1 << 23), mode="fase",
+                         direct_mode=direct)
+        rt.load(asm.assemble(LIBC + "\n.text\n" + PAGE_HEAVY), ["ph"])
+        rep = rt.run(max_ticks=1 << 36)
+        tot[direct] = rep.traffic_total
+    assert tot[False] <= 0.05 * tot[True]
+
+
+# ---------------------------------------------------------------------------
+# Channel occupancy
+# ---------------------------------------------------------------------------
+def test_uart_occupancy_queues_at_busy_until():
+    """Back-to-back sends queue behind ``busy_until``."""
+    ch = UartChannel(baud=921600)
+    t1 = ch.send(100, at_tick=0, category="a")
+    assert ch.busy_until == t1
+    t2 = ch.send(100, at_tick=0, category="b")   # queued behind the first
+    assert t2 == t1 + ch.ticks_for_bytes(100)
+    # a send issued mid-flight starts when the line frees, not earlier
+    t3 = ch.send(10, at_tick=t2 - 5, category="c")
+    assert t3 == t2 + ch.ticks_for_bytes(10)
+
+
+def test_oracle_mode_costs_zero_ticks():
+    for ch in (UartChannel(enabled=False), OracleChannel(),
+               make_channel("oracle")):
+        assert ch.send(10000, at_tick=7, category="x") == 7
+        assert ch.busy_until == 0
+        assert ch.total_bytes == 10000    # traffic still accounted
+
+
+def test_pcie_latency_paid_once_per_transaction():
+    """On a latency-dominated link, one 32-request transaction must beat
+    32 single-request transactions by ~31 setup latencies."""
+    def run(batched):
+        t = PySim(1, 1 << 20)
+        sess = HtpSession(t, PcieChannel())
+        if batched:
+            txn = HtpTransaction()
+            for i in range(1, 32):
+                txn.reg_read(0, i, "ctxsw")
+            return sess.submit(txn, 0).done
+        at = 0
+        for i in range(1, 32):
+            at = sess.submit(
+                HtpTransaction().reg_read(0, i, "ctxsw"), at).done
+        return at
+    lat = PcieChannel().latency_ticks
+    assert lat > 0
+    assert run(False) - run(True) >= 30 * lat
+
+
+# ---------------------------------------------------------------------------
+# Session semantics
+# ---------------------------------------------------------------------------
+def test_transaction_results_are_request_ordered():
+    t = PySim(1, 1 << 20)
+    for i in range(1, 4):
+        t.reg_write(0, i, 100 + i)
+    sess = HtpSession(t, UartChannel())
+    txn = (HtpTransaction().reg_read(0, 1).reg_read(0, 2)
+           .reg_read(0, 3).tick())
+    res = sess.submit(txn, 0)
+    assert res.values[:3] == [101, 102, 103]
+    assert res.ticks == sorted(res.ticks)        # monotone completions
+    assert res.done == res.ticks[-1]
+    assert sess.stats.requests["RegR"] == 3
+    assert sess.stats.transactions == 1
+
+
+def test_batched_uart_timing_matches_sequential():
+    """On the UART (no per-transaction latency) a batch completes when
+    the same requests issued back-to-back would have."""
+    def total(batched):
+        t = PySim(1, 1 << 20)
+        sess = HtpSession(t, UartChannel())
+        if batched:
+            txn = HtpTransaction()
+            for i in range(1, 32):
+                txn.reg_write(0, i, i, "ctxsw")
+            return sess.submit(txn, 0).done
+        at = 0
+        for i in range(1, 32):
+            at = sess.submit(
+                HtpTransaction().reg_write(0, i, i, "ctxsw"), at).done
+        return at
+    a, b = total(True), total(False)
+    assert abs(a - b) <= 31                      # per-prefix rounding only
+
+
+def test_redirect_resume_tick_is_transaction_completion():
+    t = PySim(1, 1 << 20)
+    sess = HtpSession(t, UartChannel())
+    txn = HtpTransaction()
+    for i in range(1, 32):
+        txn.reg_write(0, i, i)
+    txn.redirect(0, 0x10000)
+    res = sess.submit(txn, 0)
+    assert t.stall_until[0] == res.ticks[-1]
+    assert t.pc[0] == 0x10000
+
+
+@pytest.mark.parametrize("link", ["uart", "pcie"])
+def test_runtime_end_to_end_on_link(link):
+    rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link=link)
+    rt.load(build("hello"), ["hello"])
+    rep = rt.run(max_ticks=1 << 34)
+    assert b"hello from FASE target" in rep.stdout
+    assert rep.traffic_total > 0
+    assert rep.stall["uart_ticks"] > 0           # link wait ticks
+    assert rt.session.stats.transactions > 0
+
+
+def test_pcie_link_stalls_less_than_uart():
+    reps = {}
+    for link in ("uart", "pcie"):
+        rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link=link)
+        rt.load(build("hello"), ["hello"])
+        reps[link] = rt.run(max_ticks=1 << 34)
+    assert reps["pcie"].stall["uart_ticks"] < \
+        reps["uart"].stall["uart_ticks"]
+    assert reps["pcie"].ticks < reps["uart"].ticks
+    # byte accounting is link-independent
+    assert reps["pcie"].traffic_total == reps["uart"].traffic_total

@@ -1,4 +1,20 @@
-"""The paper's own target system (Rocket on KCU105, Table III)."""
+"""The paper's own target system (Rocket on KCU105, Table III).
+
+``runtime_kwargs`` filters a target config down to the keyword surface
+of :class:`~repro.core.runtime.FaseRuntime` (link/baud + the queue-pair
+session knobs), so benchmarks can instantiate a runtime straight from a
+registry entry.
+"""
 from .registry import FASE_ROCKET, FASE_ROCKET_PCIE  # noqa: F401
 
 CONFIG = FASE_ROCKET
+
+_RUNTIME_KEYS = ("link", "baud", "session")
+_RENAMED = {"qp_depth": "queue_depth", "qp_coalesce_ticks": "coalesce_ticks"}
+
+
+def runtime_kwargs(cfg: dict = FASE_ROCKET) -> dict:
+    out = {k: cfg[k] for k in _RUNTIME_KEYS if k in cfg}
+    out.update({new: cfg[old] for old, new in _RENAMED.items()
+                if old in cfg})
+    return out

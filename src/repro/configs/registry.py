@@ -63,13 +63,20 @@ xlstm_350m = _add(ModelConfig(
 
 # --- the paper's own target (FASE on Rocket) is a core config, not an LM ---
 # ``link`` selects the host<->target channel backend by name from
-# repro.core.channel.CHANNELS ("uart" | "pcie" | "oracle").
+# repro.core.channel.CHANNELS ("uart" | "pcie" | "oracle").  The queue-pair
+# knobs feed repro.core.cq.AsyncHtpSession: ``session`` picks the sync or
+# async engine, ``qp_depth`` the in-flight transaction cap, and
+# ``qp_coalesce_ticks`` the doorbell-coalescing window (target ticks).
+# On the UART they are inert — the async engine is tick-identical there.
 FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
-                   link="uart", baud=921600, l1=32 << 10, l2=256 << 10)
+                   link="uart", baud=921600, l1=32 << 10, l2=256 << 10,
+                   session="async", qp_depth=8, qp_coalesce_ticks=50)
 
 # the same target behind a modelled PCIe/AXI-DMA link (the scale-up
-# direction: bandwidth-rich, latency-dominated — batching matters)
-FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie"}
+# direction: bandwidth-rich, latency-dominated — batching + queue-pair
+# overlap matter; the coalescing window widens to the 1 us setup latency)
+FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie", "qp_depth": 16,
+                    "qp_coalesce_ticks": 100}
 
 
 def get(name: str) -> ModelConfig:

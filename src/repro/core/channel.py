@@ -36,6 +36,12 @@ class Channel(ABC):
     """Occupancy + accounting model of one host<->target link."""
 
     name = "channel"
+    #: True when the link's per-transaction setup latency can overlap with
+    #: other transactions' wire time (descriptor rings / doorbells).  The
+    #: :class:`~repro.core.cq.AsyncHtpSession` only engages its pipelined
+    #: engine on such links; serial links (UART) keep the synchronous
+    #: tick-exact arithmetic.
+    pipelined = False
 
     def __init__(self, clock_hz: int = CLOCK_HZ, enabled: bool = True):
         self.clock_hz = clock_hz
@@ -118,6 +124,7 @@ class PcieChannel(Channel):
     dominant lever — the scaling direction HtpSession exists for."""
 
     name = "pcie"
+    pipelined = True
 
     def __init__(self, gbits_per_s: float = 32.0, latency_us: float = 1.0,
                  clock_hz: int = CLOCK_HZ, enabled: bool = True):

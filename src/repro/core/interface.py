@@ -9,7 +9,7 @@ The paper's target core exposes exactly three signal bundles:
 plus an optional ``Interrupt``.  Everything the controller does (Table II) is
 a composition of these.  In this reproduction the composition is modelled
 *behaviourally*: each HTP execution pattern is applied as a direct state
-update, while :mod:`repro.core.controller` accounts its cycle/byte cost from
+update, while :mod:`repro.core.session` accounts its cycle/byte cost from
 the very same Table II instruction sequences.  This keeps semantics exact and
 the timing model faithful without interpreting injected instructions one by
 one (the paper itself notes controller-side latency is negligible next to

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..session import HtpTransaction
 from .vm import (PAGE, PROT_EXEC, PROT_READ, PROT_WRITE, STACK_TOP)
 
 MAIN_STACK_BYTES = 256 * 1024
@@ -15,7 +16,6 @@ MAIN_STACK_BYTES = 256 * 1024
 def load_image(rt, image, argv: list[str], envp: list[str] | None = None):
     """Returns (entry, sp, brk_base).  All traffic accounted as 'load'."""
     vm = rt.vm
-    ctl = rt.ctl
     t = 0
     for seg in image.segments:
         prot = PROT_READ | (PROT_EXEC if "x" in seg.flags else PROT_WRITE)
@@ -53,8 +53,10 @@ def load_image(rt, image, argv: list[str], envp: list[str] | None = None):
     if blob:
         t = vm.write_bytes(str_base, bytes(blob), 0, t, "load")
 
-    # point every core's MMU at the new tables
-    for c in range(ctl.t.n_cores):
-        t = ctl.set_mmu(c, vm.satp, t, "load")
+    # point every core's MMU at the new tables: one SetMMU batch
+    txn = HtpTransaction()
+    for c in range(rt.target.n_cores):
+        txn.set_mmu(c, vm.satp, "load")
+    t = rt.session.submit(txn, t).done
     rt.load_ticks = t
     return image.entry, sp, t

@@ -3,12 +3,16 @@
 After reset every core is parked in privileged mode.  Execution starts with
 a Redirect into user mode; the runtime then blocks on the exception queue
 (``Next``), dispatches syscalls / page faults, applies state updates
-through HTP, and re-Redirects.  HTP flows through an
-:class:`~repro.core.session.HtpSession`: multi-request sequences (context
-save/restore, Next+shootdown, the final counter harvest) are built as
-:class:`~repro.core.session.HtpTransaction` batches that occupy the
-channel once, while single-shot call sites still go through the
-``FaseController`` shim.  Two timing modes share all functional code:
+through HTP, and re-Redirects.  All HTP is native
+:class:`~repro.core.session.HtpTransaction` batches (context
+save/restore, Next+shootdown, whole page faults, the final counter
+harvest), submitted on the trapping hart's submission stream.  The
+session is either the synchronous :class:`~repro.core.session.HtpSession`
+(``session="sync"``) or the queue-pair
+:class:`~repro.core.cq.AsyncHtpSession` (``session="async"``, the
+default), which overlaps independent per-core streams on pipelined links
+and is tick-identical to the synchronous session on the UART.  Two timing
+modes share all functional code:
 
   * ``mode="fase"``   — every HTP transaction serialises through the
     selected channel backend (``link="uart" | "pcie" | "oracle"``, default
@@ -26,7 +30,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .. import channel as chmod
-from ..controller import FaseController
+from ..cq import AsyncHtpSession
 from ..hfutex import HFutexCache
 from ..session import HtpSession, HtpTransaction
 from ..target.cpu import CLOCK_HZ
@@ -58,6 +62,7 @@ class Report:
     sched: dict = field(default_factory=dict)
     vm: dict = field(default_factory=dict)
     hfutex: dict = field(default_factory=dict)
+    cq: dict = field(default_factory=dict)   # queue-pair engine counters
     load_ticks: int = 0
     exit_code: int = 0
 
@@ -76,18 +81,26 @@ class FaseRuntime:
                  hfutex: bool = True, direct_mode: bool = False,
                  link: str | None = None,
                  host_base_us: float = 35.0, host_us_per_req: float = 12.0,
-                 fault_preload: int = 16):
+                 fault_preload: int = 16, session: str = "async",
+                 queue_depth: int = 8, coalesce_ticks: int = 50):
         assert mode in ("fase", "oracle")
+        assert session in ("async", "sync")
         self.target = target
         self.mode = mode
         self.link = link or ("uart" if mode == "fase" else "oracle")
         ch = chmod.make_channel(self.link, baud=baud,
                                 enabled=(mode == "fase"))
         hf = HFutexCache(target.n_cores, enabled=hfutex)
-        self.session = HtpSession(target, ch, hf, direct_mode=direct_mode)
-        self.ctl = FaseController(session=self.session)
+        if session == "async":
+            self.session = AsyncHtpSession(target, ch, hf,
+                                           direct_mode=direct_mode,
+                                           depth=queue_depth,
+                                           coalesce_ticks=coalesce_ticks)
+        else:
+            self.session = HtpSession(target, ch, hf,
+                                      direct_mode=direct_mode)
         self.alloc = PageAllocator(target.mem_bytes)
-        self.vm = VirtualMemory(self.ctl, self.alloc,
+        self.vm = VirtualMemory(self.session, self.alloc,
                                 fault_preload=fault_preload)
         self.fdt = FdTable()
         self.async_io = AsyncHostIO(self.fdt)
@@ -123,7 +136,7 @@ class FaseRuntime:
         return t * (1_000_000_000 // CLOCK_HZ)
 
     def _total_requests(self) -> int:
-        return sum(self.ctl.stats.requests.values())
+        return sum(self.session.stats.requests.values())
 
     def charge(self, t: int, args, kcost_key: str, extra_kcost: int) -> int:
         """Charge host-runtime latency (fase) or kernel cost (oracle)."""
@@ -149,14 +162,14 @@ class FaseRuntime:
         txn = HtpTransaction()
         for i in range(1, 32):
             txn.reg_read(cpu, i, "ctxsw")
-        res = self.session.submit(txn, t)
+        res = self.session.submit(txn, t, stream=cpu)
         thread.regs = [0] + list(res.values)
         thread.pc = pc
         return res.done
 
     def switch_in(self, cpu: int, thread, t: int) -> int:
         txn = HtpTransaction()
-        if self.ctl.hfutex.clear_core(cpu):
+        if self.session.hfutex.clear_core(cpu):
             txn.hfutex_update(cpu)
         if thread.wake_value is not None:
             thread.regs[10] = thread.wake_value & ((1 << 64) - 1)
@@ -170,7 +183,7 @@ class FaseRuntime:
             self.stats["kernel_ticks"] += kc
             t += kc
         txn.redirect(cpu, thread.pc, "ctxsw")
-        t = self.session.submit(txn, t).done
+        t = self.session.submit(txn, t, stream=cpu).done
         self.sched.assign(cpu, thread.tid)
         self.sched.ctx_switches += 1
         return t
@@ -198,9 +211,10 @@ class FaseRuntime:
             for i in range(1, 32):
                 txn.reg_write(cpu, i, thread.regs[i], "signal")
             txn.redirect(cpu, thread.pc, "signal")
-            self.session.submit(txn, t)
+            self.session.submit(txn, t, stream=cpu)
             return
-        self.ctl.redirect(cpu, pc, t, "redirect")
+        self.session.submit(
+            HtpTransaction().redirect(cpu, pc, "redirect"), t, stream=cpu)
 
     def schedule_onto(self, cpu: int, t: int):
         tid = self.sched.pick_next()
@@ -219,10 +233,12 @@ class FaseRuntime:
             t = self.vm.ensure_mapped(thread.clear_child_tid, 4, cpu, t,
                                       want_write=True)
             pa = self.vm.translate(thread.clear_child_tid)
-            old = self.ctl.t.mem_read_word(pa & ~7)
+            old = self.target.mem_read_word(pa & ~7)
             shift = (pa & 4) * 8
             new = (old & ~(0xFFFFFFFF << shift))
-            t = self.ctl.mem_write(cpu, pa & ~7, new, t, "exit")
+            t = self.session.submit(
+                HtpTransaction().mem_write(cpu, pa & ~7, new, "exit"), t,
+                stream=cpu).done
             woken = self.sched.futex_wake(pa & ~3, 1 << 30)
             self.wake_threads(woken, t)
         self.schedule_onto(cpu, t)
@@ -257,7 +273,7 @@ class FaseRuntime:
                 return
             th = self.sched.threads[tid]
             self.switch_in(cpu, th, max(now, th.ready_at,
-                                        self.ctl.channel.busy_until))
+                                        self.session.channel.busy_until))
 
     def _handle_exception(self, cpu: int, now: int):
         self.stats["exceptions"] += 1
@@ -270,7 +286,7 @@ class FaseRuntime:
         # controller-internal peek for the HFutex fast path (§V-B)
         cause = self.target.csr_read(cpu, "mcause")
         epc = self.target.csr_read(cpu, "mepc")
-        done = self.ctl.try_hfutex_fast_path(cpu, cause, epc, now)
+        done = self.session.try_hfutex_fast_path(cpu, cause, epc, now)
         if done is not None:
             self.stats["hfutex_hits"] += 1
             return
@@ -280,7 +296,7 @@ class FaseRuntime:
         if flush_owed:
             txn.flush_tlb(cpu, "shootdown")
             self.vm.pending_flush.discard(cpu)
-        res = self.session.submit(txn, now)
+        res = self.session.submit(txn, now, stream=cpu)
         t, (cause, epc, tval) = res.done, res.values[0]
         if cause == 8:        # ecall from U
             sysmod.dispatch(self, cpu, thread, epc, t)
@@ -306,7 +322,10 @@ class FaseRuntime:
                             self.host_us_per_req * 2) * self.ticks_per_us)
                 self.stats["runtime_ticks"] += host
                 t2 += host
-            self.ctl.redirect(cpu, epc, t2, "pagefault")
+            # the resume explicitly depends on the fault batch's token
+            self.session.submit(
+                HtpTransaction().redirect(cpu, epc, "pagefault"), t2,
+                stream=cpu, deps=(self.vm.last_token,))
             return
         raise TargetCrash(f"cpu{cpu} tid{thread.tid}: cause={cause} "
                           f"epc={epc:#x} tval={tval:#x}")
@@ -335,11 +354,15 @@ class FaseRuntime:
         return self.finish()
 
     def finish(self) -> Report:
-        # final counter harvest: Tick + per-core UTick as one transaction
+        # final counter harvest: Tick + per-core UTick as one transaction,
+        # barriered on every stream's last completion token
         txn = HtpTransaction().tick()
         for c in range(self.target.n_cores):
             txn.utick(c)
-        res = self.session.submit(txn, self.ctl.channel.busy_until)
+        sess = self.session
+        deps = sess.tail_tokens() if isinstance(sess, AsyncHtpSession) \
+            else ()
+        res = sess.submit(txn, sess.channel.busy_until, deps=deps)
         uticks = list(res.values[1:])
         rep = Report(
             ticks=self.target.get_ticks(),
@@ -348,10 +371,10 @@ class FaseRuntime:
                      for c in range(self.target.n_cores)],
             stdout=bytes(self.fdt.stdout),
             syscalls=dict(self.stats["syscalls"]),
-            traffic=dict(self.ctl.channel.bytes_by_cat),
-            traffic_total=self.ctl.channel.total_bytes,
-            stall={"controller_cycles": self.ctl.stats.controller_cycles,
-                   "uart_ticks": self.ctl.stats.uart_ticks,
+            traffic=dict(sess.channel.bytes_by_cat),
+            traffic_total=sess.channel.total_bytes,
+            stall={"controller_cycles": sess.stats.controller_cycles,
+                   "uart_ticks": sess.stats.uart_ticks,
                    "runtime_ticks": self.stats["runtime_ticks"],
                    "kernel_ticks": self.stats["kernel_ticks"]},
             sched={"ctx_switches": self.sched.ctx_switches,
@@ -361,7 +384,9 @@ class FaseRuntime:
                    "futex_wakes_empty": self.stats["futex_wakes_empty"]},
             vm=dict(self.vm.stats),
             hfutex={"hits": self.stats["hfutex_hits"],
-                    "inserts": self.ctl.hfutex.inserts},
+                    "inserts": sess.hfutex.inserts},
+            cq=(sess.cqstats.as_dict()
+                if isinstance(sess, AsyncHtpSession) else {}),
             load_ticks=self.load_ticks,
             exit_code=self.exit_code,
         )

@@ -1,14 +1,19 @@
 """Linux-style syscall layer (paper §V): the host-side handlers that give
 user programs a Linux-compatible contract without any target kernel.
 
-Every argument-register read, result write and memory transfer goes through
-the controller so its UART bytes and latency are accounted; the oracle
-("full-system") timing mode instead charges the per-syscall kernel-cost
-model — both modes share these handlers, so functional behaviour is
-identical and only timing differs (that is the paper's accuracy metric).
+Every argument-register read, result write and memory transfer is a
+native :class:`~repro.core.session.HtpTransaction` submitted on the
+trapping hart's stream, so its wire bytes and latency are accounted; the
+oracle ("full-system") timing mode instead charges the per-syscall
+kernel-cost model — both modes share these handlers, so functional
+behaviour is identical and only timing differs (that is the paper's
+accuracy metric).  Argument registers are still read lazily (one RegR
+transaction per touched arg): the traffic a syscall bills must scale with
+the arguments its handler actually consumes.
 """
 from __future__ import annotations
 
+from ..session import HtpTransaction
 from . import vm as vmod
 from .vm import MAP_ANON, MAP_SHARED, PAGE, PROT_READ, PROT_WRITE
 
@@ -54,8 +59,9 @@ class SyscallError(Exception):
 
 def dispatch(rt, cpu: int, thread, epc: int, t0: int) -> None:
     """Handle the ecall raised by ``thread`` on ``cpu`` trapped at ``t0``."""
-    ctl = rt.ctl
-    t, nr = ctl.reg_read(cpu, 17, t0, "")        # a7
+    res = rt.session.submit(HtpTransaction().reg_read(cpu, 17), t0,
+                            stream=cpu)                       # a7
+    t, nr = res.done, res.values[0]
     name = NAME.get(nr, f"sys_{nr}")
     rt.stats["syscalls"][name] = rt.stats["syscalls"].get(name, 0) + 1
     args = _ArgReader(rt, cpu, name)
@@ -74,9 +80,11 @@ class _ArgReader:
 
     def __getitem__(self, i) -> int:
         if i not in self._vals:
-            self.t, v = self.rt.ctl.reg_read(self.cpu, 10 + i, self.t,
-                                             self.cat)
-            self._vals[i] = v
+            res = self.rt.session.submit(
+                HtpTransaction().reg_read(self.cpu, 10 + i, self.cat),
+                self.t, stream=self.cpu)
+            self.t = res.done
+            self._vals[i] = res.values[0]
         return self._vals[i]
 
     def signed(self, i) -> int:
@@ -87,9 +95,10 @@ class _ArgReader:
 def _finish(rt, cpu, thread, epc, args, retval, kcost_key=None,
             extra_kcost=0):
     """Write a0, charge timing, resume at epc+4 (or take a signal)."""
-    t = args.t
     rv = retval & ((1 << 64) - 1)
-    t = rt.ctl.reg_write(cpu, 10, rv, t, args.cat)
+    t = rt.session.submit(
+        HtpTransaction().reg_write(cpu, 10, rv, args.cat),
+        args.t, stream=cpu).done
     t = rt.charge(t, args, kcost_key or args.cat, extra_kcost)
     rt.resume(cpu, thread, epc + 4, t)
 
@@ -314,15 +323,23 @@ def _sys_futex(rt, cpu, thread, epc, args):
     if cmd == FUTEX_WAIT:
         t = rt.vm.ensure_mapped(uaddr, 4, cpu, t)
         pa = rt.vm.translate(uaddr)
-        t, word = rt.ctl.mem_read(cpu, pa & ~7, t, "futex")
+        res = rt.session.submit(
+            HtpTransaction().mem_read(cpu, pa & ~7, "futex"), t,
+            stream=cpu)
+        t, word = res.done, res.values[0]
         cur = (word >> ((pa & 4) * 8)) & 0xFFFFFFFF
         if cur != (val & 0xFFFFFFFF):
             args.t = t
             return _finish(rt, cpu, thread, epc, args, -EAGAIN,
                            "futex_wait")
-        # clear HFutex masks holding this pa (wakes must reach the host now)
-        for c in rt.ctl.hfutex.clear_pa(pa & ~3):
-            t = rt.ctl.hfutex_update(c, t)
+        # clear HFutex masks holding this pa (wakes must reach the host
+        # now); one mask-update batch covers every touched core
+        touched = rt.session.hfutex.clear_pa(pa & ~3)
+        if touched:
+            txn = HtpTransaction()
+            for c in touched:
+                txn.hfutex_update(c)
+            t = rt.session.submit(txn, t, stream=cpu).done
         t = rt.charge(t, args, "futex_wait", 0)
         t = rt.save_context(cpu, thread, epc + 4, t)
         thread.regs[10] = 0          # default wake result
@@ -337,8 +354,10 @@ def _sys_futex(rt, cpu, thread, epc, args):
         rt.stats["futex_wakes"] += 1
         if not woken:
             rt.stats["futex_wakes_empty"] += 1
-            if rt.ctl.hfutex.insert(cpu, uaddr, pa):
-                t = rt.ctl.hfutex_update(cpu, t)
+            if rt.session.hfutex.insert(cpu, uaddr, pa):
+                t = rt.session.submit(
+                    HtpTransaction().hfutex_update(cpu), t,
+                    stream=cpu).done
         else:
             rt.wake_threads(woken, t)
         args.t = t

@@ -15,11 +15,23 @@ through HTP — ``MemW`` for PTEs, ``PageS`` for zeroing, ``PageCP`` for COW,
   * delayed remote TLB shootdown: a munmap marks every *other* core for a
     flush that is issued only when that core next traps, while VA ranges
     are never reused (non-overlapping allocation guarantee).
+
+HTP flows as native transactions: every fault, munmap and brk path
+*builds* one :class:`~repro.core.session.HtpTransaction` (all its PageS /
+PageW / PageCP materialisations, MemW PTE updates and the trailing
+FlushTLB) and submits it once on the faulting hart's stream — a 16-page
+preload fault is one wire batch, not ~50 round trips.  Read paths
+(``read_bytes``) batch their PageR/MemR requests per call and pick the
+values out of the request-ordered result.  The submitting session may be
+the synchronous :class:`~repro.core.session.HtpSession` or the pipelined
+:class:`~repro.core.cq.AsyncHtpSession`; ``last_token`` after each submit
+is the dependency token the runtime chains its Redirect on.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..session import HtpTransaction
 from ..target import isa
 
 PAGE = 4096
@@ -112,9 +124,9 @@ class SwPte:
 class VirtualMemory:
     """One address space (FASE runs a single multi-threaded process)."""
 
-    def __init__(self, ctl, alloc: PageAllocator, cpu0: int = 0,
+    def __init__(self, session, alloc: PageAllocator, cpu0: int = 0,
                  fault_preload: int = 16):
-        self.ctl = ctl
+        self.sess = session
         self.alloc = alloc
         self.fault_preload = fault_preload
         self.pt: dict[int, SwPte] = {}       # vpn -> software PTE
@@ -126,43 +138,52 @@ class VirtualMemory:
         # hardware table pages: vpn-prefix -> ppn of table page
         self.root_ppn = alloc.alloc()
         self._tables: dict[tuple, int] = {}
-        self.stats = {"faults": 0, "cow_copies": 0, "pages_mapped": 0}
+        self.stats = {"faults": 0, "cow_copies": 0, "pages_mapped": 0,
+                      "fault_txn_requests": 0}
+        self.last_token = None               # dep token of the last submit
         # zero the root table
-        t = ctl.page_set(cpu0, self.root_ppn, 0, 0, "load")
-        self._last = t
+        self._last = self._submit(
+            HtpTransaction().page_set(cpu0, self.root_ppn, 0, "load"),
+            0, cpu0).done
 
     @property
     def satp(self) -> int:
         return SV39_MODE | self.root_ppn
 
+    def _submit(self, txn: HtpTransaction, at: int, cpu: int):
+        """Submit one built batch on the hart's stream."""
+        res = self.sess.submit(txn, at, stream=cpu)
+        if res.token is not None:
+            self.last_token = res.token
+        return res
+
     # ---------------- hardware table maintenance ----------------------
-    def _table_for(self, vpn: int, cpu: int, at: int,
-                   category: str) -> tuple[int, int, int]:
-        """Ensure L1/L0 tables exist for vpn; returns (t, l0_ppn, idx0)."""
+    def _table_for(self, vpn: int, cpu: int, txn: HtpTransaction,
+                   category: str) -> tuple[int, int]:
+        """Ensure L1/L0 tables exist for vpn (appending the PageS zeroing
+        and MemW pointer writes to ``txn``); returns (l0_ppn, idx0)."""
         vpn2, vpn1, vpn0 = (vpn >> 18) & 0x1FF, (vpn >> 9) & 0x1FF, vpn & 0x1FF
-        t = at
         l1_key = (vpn2,)
         if l1_key not in self._tables:
             ppn = self.alloc.alloc()
             self._tables[l1_key] = ppn
-            t = self.ctl.page_set(cpu, ppn, 0, t, category)
-            t = self.ctl.mem_write(cpu, self.root_ppn * PAGE + vpn2 * 8,
-                                   (ppn << 10) | isa.PTE_V, t, category)
+            txn.page_set(cpu, ppn, 0, category)
+            txn.mem_write(cpu, self.root_ppn * PAGE + vpn2 * 8,
+                          (ppn << 10) | isa.PTE_V, category)
         l0_key = (vpn2, vpn1)
         if l0_key not in self._tables:
             ppn = self.alloc.alloc()
             self._tables[l0_key] = ppn
-            t = self.ctl.page_set(cpu, ppn, 0, t, category)
+            txn.page_set(cpu, ppn, 0, category)
             l1 = self._tables[l1_key]
-            t = self.ctl.mem_write(cpu, l1 * PAGE + vpn1 * 8,
-                                   (ppn << 10) | isa.PTE_V, t, category)
-        return t, self._tables[l0_key], vpn0
+            txn.mem_write(cpu, l1 * PAGE + vpn1 * 8,
+                          (ppn << 10) | isa.PTE_V, category)
+        return self._tables[l0_key], vpn0
 
-    def _write_hw_pte(self, vpn: int, pte_val: int, cpu: int, at: int,
-                      category: str) -> int:
-        t, l0, idx = self._table_for(vpn, cpu, at, category)
-        return self.ctl.mem_write(cpu, l0 * PAGE + idx * 8, pte_val, t,
-                                  category)
+    def _write_hw_pte(self, vpn: int, pte_val: int, cpu: int,
+                      txn: HtpTransaction, category: str) -> None:
+        l0, idx = self._table_for(vpn, cpu, txn, category)
+        txn.mem_write(cpu, l0 * PAGE + idx * 8, pte_val, category)
 
     def _pte_bits(self, prot: int, cow: bool) -> int:
         b = isa.PTE_V | isa.PTE_U | isa.PTE_A | isa.PTE_D
@@ -175,12 +196,11 @@ class VirtualMemory:
         return b
 
     def _install(self, vpn: int, ppn: int, prot: int, cow: bool,
-                 cpu: int, at: int, category: str) -> int:
+                 cpu: int, txn: HtpTransaction, category: str) -> None:
         self.pt[vpn] = SwPte(ppn, prot, cow)
         self.stats["pages_mapped"] += 1
-        return self._write_hw_pte(vpn, (ppn << 10) |
-                                  self._pte_bits(prot, cow),
-                                  cpu, at, category)
+        self._write_hw_pte(vpn, (ppn << 10) | self._pte_bits(prot, cow),
+                           cpu, txn, category)
 
     # ---------------- segment management -------------------------------
     def find_segment(self, va: int) -> Mapping | None:
@@ -210,18 +230,19 @@ class VirtualMemory:
 
     def munmap(self, start: int, length: int, cpu: int, at: int) -> int:
         end = (start + length + PAGE - 1) & ~(PAGE - 1)
-        t = at
         for m in list(self.segments):
             if m.start >= start and m.end <= end:
                 self.segments.remove(m)
+        txn = HtpTransaction()
         for vpn in range(start >> 12, end >> 12):
             pte = self.pt.pop(vpn, None)
             if pte is not None:
                 self.alloc.unref(pte.ppn)
-                t = self._write_hw_pte(vpn, 0, cpu, t, "munmap")
+                self._write_hw_pte(vpn, 0, cpu, txn, "munmap")
         # local flush now; remote cores flushed lazily at their next trap
-        t = self.ctl.flush_tlb(cpu, t, "munmap")
-        self.pending_flush.update(c for c in range(self.ctl.t.n_cores)
+        txn.flush_tlb(cpu, "munmap")
+        t = self._submit(txn, at, cpu).done
+        self.pending_flush.update(c for c in range(self.sess.t.n_cores)
                                   if c != cpu)
         return t
 
@@ -230,14 +251,16 @@ class VirtualMemory:
             return self.brk, at
         t = at
         if new_brk < self.brk:   # shrink: release whole pages
+            txn = HtpTransaction()
             for vpn in range((new_brk + PAGE - 1) >> 12,
                              (self.brk + PAGE - 1) >> 12):
                 pte = self.pt.pop(vpn, None)
                 if pte is not None:
                     self.alloc.unref(pte.ppn)
-                    t = self._write_hw_pte(vpn, 0, cpu, t, "brk")
-            t = self.ctl.flush_tlb(cpu, t, "brk")
-            self.pending_flush.update(c for c in range(self.ctl.t.n_cores)
+                    self._write_hw_pte(vpn, 0, cpu, txn, "brk")
+            txn.flush_tlb(cpu, "brk")
+            t = self._submit(txn, t, cpu).done
+            self.pending_flush.update(c for c in range(self.sess.t.n_cores)
                                       if c != cpu)
         else:
             seg = next((m for m in self.segments if m.kind == "anon" and
@@ -258,51 +281,55 @@ class VirtualMemory:
         return (pte.ppn << 12) | (va & (PAGE - 1))
 
     def _file_page_ppn(self, f: FileImage, page_idx: int, cpu: int,
-                       at: int, category: str) -> tuple[int, int]:
+                       txn: HtpTransaction, category: str) -> int:
         """Materialise a file page in the target page cache."""
-        t = at
         if page_idx not in f.pages:
             ppn = self.alloc.alloc()
             lo = page_idx * PAGE
             chunk = bytes(f.data[lo:lo + PAGE]).ljust(PAGE, b"\0")
             import numpy as np
             words = np.frombuffer(chunk, dtype=np.uint64)
-            t = self.ctl.page_write(cpu, ppn, words, t, category)
+            txn.page_write(cpu, ppn, words, category)
             f.pages[page_idx] = ppn
-        return f.pages[page_idx], t
+        return f.pages[page_idx]
 
     def fault_in(self, vpn: int, m: Mapping, want_write: bool, cpu: int,
-                 at: int, category: str) -> int:
-        """Materialise one page of mapping ``m``."""
-        t = at
+                 txn: HtpTransaction, category: str) -> None:
+        """Append the materialisation of one page of ``m`` to ``txn``."""
         va = vpn << 12
         if m.kind == "anon":
             ppn = self.alloc.alloc()
-            t = self.ctl.page_set(cpu, ppn, 0, t, category)
-            t = self._install(vpn, ppn, m.prot, False, cpu, t, category)
-            return t
+            txn.page_set(cpu, ppn, 0, category)
+            self._install(vpn, ppn, m.prot, False, cpu, txn, category)
+            return
         page_idx = (m.offset + (va - m.start)) >> 12
-        cache_ppn, t = self._file_page_ppn(m.file, page_idx, cpu, t,
-                                           category)
+        cache_ppn = self._file_page_ppn(m.file, page_idx, cpu, txn,
+                                        category)
         if m.shared:
             self.alloc.ref(cache_ppn)
-            return self._install(vpn, cache_ppn, m.prot, False, cpu, t,
-                                 category)
+            self._install(vpn, cache_ppn, m.prot, False, cpu, txn,
+                          category)
+            return
         if want_write:
             # private write: copy now
             ppn = self.alloc.alloc()
-            t = self.ctl.page_copy(cpu, cache_ppn, ppn, t, category)
+            txn.page_copy(cpu, cache_ppn, ppn, category)
             self.stats["cow_copies"] += 1
-            return self._install(vpn, ppn, m.prot, False, cpu, t, category)
+            self._install(vpn, ppn, m.prot, False, cpu, txn, category)
+            return
         # private read: share the cache page copy-on-write
         self.alloc.ref(cache_ppn)
-        return self._install(vpn, cache_ppn, m.prot, True, cpu, t, category)
+        self._install(vpn, cache_ppn, m.prot, True, cpu, txn, category)
 
     def handle_fault(self, va: int, access: str, cpu: int, at: int,
                      enforce: bool = True) -> int:
         """Page-fault entry point; raises SegFault on invalid access.
         ``enforce=False`` is the host path (loader/syscall buffers), which
-        materialises pages without the user-mode permission check."""
+        materialises pages without the user-mode permission check.
+
+        The whole fault — preload included — is built as **one native
+        transaction** (PageS/PageW/PageCP + MemW PTE updates + FlushTLB)
+        and submitted once on the faulting hart's stream."""
         self.stats["faults"] += 1
         m = self.find_segment(va)
         if m is None:
@@ -311,31 +338,32 @@ class VirtualMemory:
         if enforce and not (m.prot & need):
             raise SegFault(va, access)
         vpn = va >> 12
-        t = at
         pte = self.pt.get(vpn)
         cat = "pagefault"
+        txn = HtpTransaction()
         if pte is not None and pte.cow and access == "w":
             # COW break
             if self.alloc.refcnt.get(pte.ppn, 1) > 1:
                 new_ppn = self.alloc.alloc()
-                t = self.ctl.page_copy(cpu, pte.ppn, new_ppn, t, cat)
+                txn.page_copy(cpu, pte.ppn, new_ppn, cat)
                 self.alloc.unref(pte.ppn)
                 self.stats["cow_copies"] += 1
-                t = self._install(vpn, new_ppn, pte.prot, False, cpu, t, cat)
+                self._install(vpn, new_ppn, pte.prot, False, cpu, txn, cat)
             else:
-                t = self._install(vpn, pte.ppn, pte.prot, False, cpu, t, cat)
-            t = self.ctl.flush_tlb(cpu, t, cat)
-            return t
-        if pte is not None:
+                self._install(vpn, pte.ppn, pte.prot, False, cpu, txn, cat)
+            txn.flush_tlb(cpu, cat)
+        elif pte is not None:
             # spurious (e.g. raced with preload): just flush
-            return self.ctl.flush_tlb(cpu, t, cat)
-        t = self.fault_in(vpn, m, access == "w", cpu, t, cat)
-        # preload the next pages of the same segment (paper: 16 per fault)
-        for nvpn in range(vpn + 1, vpn + self.fault_preload):
-            if (nvpn << 12) >= m.end or nvpn in self.pt:
-                break
-            t = self.fault_in(nvpn, m, False, cpu, t, cat)
-        return t
+            txn.flush_tlb(cpu, cat)
+        else:
+            self.fault_in(vpn, m, access == "w", cpu, txn, cat)
+            # preload next pages of the same segment (paper: 16 per fault)
+            for nvpn in range(vpn + 1, vpn + self.fault_preload):
+                if (nvpn << 12) >= m.end or nvpn in self.pt:
+                    break
+                self.fault_in(nvpn, m, False, cpu, txn, cat)
+        self.stats["fault_txn_requests"] += len(txn)
+        return self._submit(txn, at, cpu).done
 
     # ---------------- byte-granular host access ------------------------
     def ensure_mapped(self, va: int, size: int, cpu: int, at: int,
@@ -353,31 +381,50 @@ class VirtualMemory:
                    category: str) -> tuple[bytes, int]:
         import numpy as np
         t = self.ensure_mapped(va, size, cpu, at)
-        out = bytearray()
+        # one read batch per call: PageR for whole pages, MemR otherwise
+        txn = HtpTransaction()
+        plan = []                      # mirrors txn: how to slice values
         pos = va
         remaining = size
         while remaining > 0:
             pa = self.translate(pos)
             in_page = min(remaining, PAGE - (pos & (PAGE - 1)))
             if in_page == PAGE and (pa & (PAGE - 1)) == 0:
-                t, words = self.ctl.page_read(cpu, pa >> 12, t, category)
-                out += np.asarray(words, dtype=np.uint64).tobytes()
+                txn.page_read(cpu, pa >> 12, category)
+                plan.append(("page", 0, PAGE))
             else:
                 w0, w1 = pa & ~7, (pa + in_page + 7) & ~7
-                buf = bytearray()
                 for wa in range(w0, w1, 8):
-                    t, w = self.ctl.mem_read(cpu, wa, t, category)
-                    buf += int(w).to_bytes(8, "little")
-                off = pa - w0
-                out += buf[off:off + in_page]
+                    txn.mem_read(cpu, wa, category)
+                lo = pa - w0
+                plan.append(("words", lo, (w1 - w0, lo + in_page)))
             pos += in_page
             remaining -= in_page
-        return bytes(out), t
+        res = self._submit(txn, t, cpu)
+        out = bytearray()
+        vi = 0
+        for kind, lo, ext in plan:
+            if kind == "page":
+                out += np.asarray(res.values[vi],
+                                  dtype=np.uint64).tobytes()
+                vi += 1
+            else:
+                nwords, hi = ext[0] // 8, ext[1]
+                buf = bytearray()
+                for w in res.values[vi:vi + nwords]:
+                    buf += int(w).to_bytes(8, "little")
+                vi += nwords
+                out += buf[lo:hi]
+        return bytes(out), res.done
 
     def write_bytes(self, va: int, data: bytes, cpu: int, at: int,
                     category: str) -> int:
         import numpy as np
         t = self.ensure_mapped(va, len(data), cpu, at, want_write=True)
+        # one write batch per call; sub-word RMW peeks the target's
+        # current words host-side (each word is written at most once per
+        # call, so build-time peeks match submit-time application order)
+        txn = HtpTransaction()
         pos = va
         idx = 0
         remaining = len(data)
@@ -386,23 +433,23 @@ class VirtualMemory:
             in_page = min(remaining, PAGE - (pos & (PAGE - 1)))
             if in_page == PAGE and (pa & (PAGE - 1)) == 0:
                 words = np.frombuffer(data[idx:idx + PAGE], dtype=np.uint64)
-                t = self.ctl.page_write(cpu, pa >> 12, words, t, category)
+                txn.page_write(cpu, pa >> 12, words, category)
             else:
                 w0, w1 = pa & ~7, (pa + in_page + 7) & ~7
                 for wa in range(w0, w1, 8):
-                    old = self.ctl.t.mem_read_word(wa)
+                    old = self.sess.t.mem_read_word(wa)
                     b = bytearray(int(old).to_bytes(8, "little"))
                     for k in range(8):
                         p = wa + k
                         if pa <= p < pa + in_page:
                             b[k] = data[idx + (p - pa)]
-                    t = self.ctl.mem_write(cpu, wa,
-                                           int.from_bytes(bytes(b), "little"),
-                                           t, category)
+                    txn.mem_write(cpu, wa,
+                                  int.from_bytes(bytes(b), "little"),
+                                  category)
             pos += in_page
             idx += in_page
             remaining -= in_page
-        return t
+        return self._submit(txn, t, cpu).done
 
     def read_cstr(self, va: int, cpu: int, at: int,
                   category: str, maxlen: int = 4096) -> tuple[str, int]:

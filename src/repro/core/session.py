@@ -3,29 +3,46 @@
 FASE's survival trick on a low-bandwidth, high-latency link is
 *consolidation*: many per-port operations become one HTP request, and many
 HTP requests become one wire transaction.  This module is the host-side
-API for the second half:
+API for the second half, and the **synchronous base** of a two-layer
+session stack:
 
   * :class:`HtpRequest`     — one typed request from Table II,
   * :class:`HtpTransaction` — an ordered batch of requests built by the
     runtime/serving layers (31 RegR of a context save, RegW×31 + Redirect
-    of a context switch, ...),
-  * :class:`HtpSession`     — submits a transaction: coalesces its wire
-    bytes, models channel occupancy **once per batch** through the
-    pluggable :class:`~repro.core.channel.Channel` backend, applies each
-    request's documented execution pattern to the target, and returns
-    per-request completion ticks.
+    of a context switch, a page fault's PageS/PageW + MemW PTE batch),
+  * :class:`HtpSession`     — the synchronous session: submits a
+    transaction, coalesces its wire bytes, models channel occupancy
+    **once per batch** through the pluggable
+    :class:`~repro.core.channel.Channel` backend, applies each request's
+    documented execution pattern to the target, and returns per-request
+    completion ticks.
 
-Timing model: a transaction's bytes stream back-to-back from
-``channel.begin(at)``; request *i* completes after its byte prefix has
-serialised and the controller has executed patterns 1..i
+Timing model (synchronous layer): a transaction's bytes stream
+back-to-back from ``channel.begin(at)``; request *i* completes after its
+byte prefix has serialised and the controller has executed patterns 1..i
 (``ctrl_cycles`` accumulate).  On a UART this is tick-identical to
 issuing the requests one by one (the link is the bottleneck and the old
 per-method API serialised everything anyway), while on a
 latency-dominated link (PCIe) the per-transaction setup cost is paid once
 per batch — which is exactly why the API is transaction-shaped.
 
-``FaseController`` (:mod:`repro.core.controller`) remains as a thin
-one-request-per-transaction compatibility shim over this session.
+Sync → async layering: :class:`~repro.core.cq.AsyncHtpSession`
+(:mod:`repro.core.cq`) subclasses this session with a queue-pair front
+end — per-hart :class:`~repro.core.cq.SubmissionStream`\\ s plus one for
+Layer-B serving traffic, a :class:`~repro.core.cq.CompletionQueue`, and
+explicit dependency tokens.  Every ``submit`` here accepts the async
+signature (``stream=``/``deps=``): the synchronous session honours
+``deps`` by delaying the transaction start (so call sites are written
+once) and ignores ``stream`` (one serial link has a single implicit
+stream).  On non-pipelined channels the async engine delegates to this
+class's arithmetic verbatim, which is what keeps the UART tick-identical
+across the two layers.
+
+Requests flagged ``virtual`` are accounting/timing-only analogues (the
+serving layer's pod-scale command batches): they occupy the channel and
+charge controller cycles but are never applied to a target, so a session
+over a real FASE target and the Layer-B serving engine can share one
+modelled link.
 """
 from __future__ import annotations
 
@@ -45,6 +62,7 @@ class HtpRequest:
     args: tuple = ()
     category: str = ""            # secondary "sys:<cat>" accounting
     nbytes: int | None = None     # wire-size override (serving analogues)
+    virtual: bool = False         # timing/accounting only, never applied
 
     def wire_bytes(self, direct: bool = False) -> int:
         if self.nbytes is not None:
@@ -134,11 +152,16 @@ class HtpTransaction:
 
 @dataclass
 class TransactionResult:
-    """Per-request completion ticks + response values, request-ordered."""
+    """Per-request completion ticks + response values, request-ordered.
+
+    ``token`` is filled by the async layer (:mod:`repro.core.cq`): a
+    dependency handle later transactions can wait on via ``deps=``.
+    """
 
     done: int                    # completion tick of the whole batch
     ticks: list = field(default_factory=list)
     values: list = field(default_factory=list)
+    token: object = None         # CompletionToken under AsyncHtpSession
 
     def __iter__(self):
         return iter(zip(self.ticks, self.values))
@@ -163,16 +186,26 @@ class HtpSession:
     def __init__(self, target, channel: Channel | None = None,
                  hfutex: HFutexCache | None = None,
                  direct_mode: bool = False):
-        self.t = target
+        self.t = target              # None = timing/accounting-only session
         self.channel = channel or UartChannel()
-        self.hfutex = hfutex or HFutexCache(target.n_cores)
+        self.hfutex = hfutex or HFutexCache(
+            target.n_cores if target is not None else 0)
         self.direct_mode = direct_mode   # per-port baseline (no HTP)
         self.stats = SessionStats()
 
     # ------------------------------------------------------------------
-    def submit(self, txn: HtpTransaction, at: int) -> TransactionResult:
-        """Send ``txn`` no earlier than tick ``at``; apply every request's
-        execution pattern to the target in order."""
+    def submit(self, txn: HtpTransaction, at: int, stream=0,
+               deps: tuple = ()) -> TransactionResult:
+        """Send ``txn`` no earlier than tick ``at`` and no earlier than
+        any dependency token in ``deps``; apply every request's execution
+        pattern to the target in order.  ``stream`` is accepted for
+        signature compatibility with the async layer and ignored here (a
+        synchronous session is one implicit stream)."""
+        for dep in deps:
+            if dep is not None:
+                at = max(at, dep.tick)
+        if not txn.requests:          # nothing crosses the wire
+            return TransactionResult(done=at)
         ch = self.channel
         self.stats.transactions += 1
         start = ch.begin(at)
@@ -205,6 +238,8 @@ class HtpSession:
     # ------------------------------------------------------------------
     def _apply(self, req: HtpRequest, done: int):
         """Apply one request's documented effect; returns its response."""
+        if req.virtual:
+            return None           # serving analogue: wire/ctrl time only
         t = self.t
         op, cpu, a = req.op, req.cpu, req.args
         if op == "Redirect":

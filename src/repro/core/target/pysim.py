@@ -96,7 +96,17 @@ class PySim:
         self.ticks = 0
         self.uticks = [0] * n
         self.instret = [0] * n
+        # Two-level host-side translation cache (pure speed, no modelled
+        # cost; the jitted target walks every access so nothing to
+        # mirror).  L1 is per-core and dropped on set_satp — i.e. every
+        # context switch; the shared L2 is keyed by (satp, vpn) so hot
+        # pages survive context switches without re-walking.  Any sfence
+        # (a real PTE change) conservatively drops the whole L2, keeping
+        # the existing delayed-shootdown semantics: only per-core L1
+        # entries may serve stale until that core's owed flush, exactly
+        # as the old per-core dicts did.
         self.tlb = [dict() for _ in range(n)]
+        self.stlb: dict = {}          # (satp, vpn) -> (ppn, perms)
 
     # ------------------------------------------------------------------
     @property
@@ -157,10 +167,11 @@ class PySim:
 
     def set_satp(self, c, v):
         self.satp[c] = v & MASK64
-        self.tlb[c].clear()
+        self.tlb[c].clear()           # L2 keyed by satp stays valid
 
     def sfence(self, c):
         self.tlb[c].clear()
+        self.stlb.clear()             # PTEs changed: drop the shared map
 
     # -- regs -----------------------------------------------------------
     def reg_read(self, c, idx):
@@ -218,6 +229,11 @@ class PySim:
         hit = self.tlb[c].get(vpn)
         if hit is not None and hit[1] & _ACC_PTE[acc]:
             return (hit[0] << 12 | (va & 0xFFF)) & self.mask
+        # shared second-level map: refill the per-core L1 without a walk
+        hit = self.stlb.get((satp, vpn))
+        if hit is not None and hit[1] & _ACC_PTE[acc]:
+            self.tlb[c][vpn] = hit
+            return (hit[0] << 12 | (va & 0xFFF)) & self.mask
         a = (satp & ((1 << 44) - 1)) << 12
         for level in (2, 1, 0):
             idx = (va >> (12 + 9 * level)) & 0x1FF
@@ -231,7 +247,9 @@ class PySim:
                 off_mask = (1 << (12 + 9 * level)) - 1
                 pa = (((pte >> 10) << 12) | (va & off_mask)) & self.mask
                 if level == 0:
-                    self.tlb[c][vpn] = (pa >> 12, pte & 0xFF)
+                    entry = (pa >> 12, pte & 0xFF)
+                    self.tlb[c][vpn] = entry
+                    self.stlb[(satp, vpn)] = entry
                 return pa
             a = (pte >> 10) << 12
         raise _Trap(_PF_CAUSE[acc], va)

@@ -6,8 +6,13 @@ The mapping (DESIGN.md §2, Layer B):
     runs every iteration; the host scheduler parks/fills slots exactly like
     FASE redirects parked cores (non-preemptive continuous batching);
   * the per-step **command batch** = HTP: one dense array set (new tokens,
-    block tables, page copy/zero lists) crosses host->device per step, and
-    its bytes are accounted per category like the UART traffic figures;
+    block tables, page copy/zero lists) crosses host->device per step; it
+    is lowered to a virtual :class:`~repro.core.session.HtpTransaction`
+    and dispatched on the ``"serve"`` stream of an
+    :class:`~repro.core.cq.AsyncHtpSession` (own modelled PCIe link by
+    default, or a FASE runtime's session passed in as ``htp_session`` so
+    Layer-A stalls and Layer-B traffic contend on one channel), and its
+    bytes are accounted per category like the UART traffic figures;
   * the device-side **stop mask** = HFutex: per-slot stop conditions
     (EOS / max-len) accumulate on device and the host polls the packed
     mask every ``poll_every`` steps instead of syncing each step — the
@@ -22,11 +27,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.channel import make_channel
+from ..core.cq import AsyncHtpSession
 from ..models import core as M
 from ..models.config import ModelConfig
 from ..models.core import PAGE_SIZE
 from .htp import CommandBatch
 from .pages import PagedKVManager
+
+#: submission-stream key for Layer-B serving traffic on a shared session
+SERVE_STREAM = "serve"
 
 I32 = jnp.int32
 
@@ -57,12 +67,19 @@ class TrafficStats:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
-                 max_seq: int = 512, poll_every: int = 4, seed: int = 0):
+                 max_seq: int = 512, poll_every: int = 4, seed: int = 0,
+                 htp_session: AsyncHtpSession | None = None,
+                 link: str = "pcie"):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.poll_every = poll_every
+        # command batches dispatch on the "serve" stream; pass a FASE
+        # runtime's session to share (and contend on) its modelled link
+        self.htp = htp_session or AsyncHtpSession(
+            None, make_channel(link))
+        self.link_tick = 0          # modelled completion of the last batch
         self.state = M.make_decode_state(cfg, slots, max_seq)
         self.pages_per_seq = self.state["block_tables"].shape[1]
         self.kv = PagedKVManager(slots * self.pages_per_seq * 2)
@@ -137,6 +154,11 @@ class ServeEngine:
                     req.rid, self.pages_per_seq)
             cb.page_copies, cb.page_zeros = self.kv.drain_commands()
             cb.account(self.traffic)
+            # dispatch over the modelled device link: one wire batch per
+            # decode step, FIFO on the serving stream
+            self.link_tick = self.htp.submit(
+                cb.to_transaction(), self.link_tick,
+                stream=SERVE_STREAM).done
             self.state["block_tables"] = jnp.asarray(cb.block_tables)
             self.state, cur, self._stop_mask, out_buf = self._step(
                 self.params, self.state, cur,

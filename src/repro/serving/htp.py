@@ -13,6 +13,17 @@ serving wire sizes overriding the Table II defaults), and
 the Layer-B traffic benchmarks mirror the paper's Fig 13.  The requests
 carry the serving slot as their ``cpu`` field — decode slots are the
 paper's CPUs.
+
+The lowered requests are ``virtual`` (timing/accounting-only): the
+engine dispatches them through an
+:class:`~repro.core.cq.AsyncHtpSession` on the ``"serve"`` submission
+stream, where they occupy the modelled link and charge controller
+cycles but are never applied to a target — so a FASE runtime (Layer A)
+and the serving engine (Layer B) can share one session and contend on
+one channel.  Their ``nbytes`` overrides are honoured by the session
+for both the serial and the pipelined path
+(:meth:`HtpRequest.wire_bytes` prefers the override in direct mode
+too), which :func:`_check_serving_specs` pins down.
 """
 from __future__ import annotations
 
@@ -20,7 +31,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core import htp
 from ..core.session import HtpRequest, HtpTransaction
+
+# Serving analogue ops and their minimum modelled wire sizes.  Mirrors
+# core/htp.py's _check_specs: the analogue set must stay a subset of
+# Table II, and every override must still carry at least an opcode.
+_SERVING_OPS = ("Redirect", "SetMMU", "PageCP", "PageS")
+
+
+def _check_serving_specs():
+    missing = [op for op in _SERVING_OPS if op not in htp.SPECS]
+    assert not missing, f"serving analogues out of sync: {missing}"
+    for op in _SERVING_OPS:
+        assert htp.SPECS[op].ctrl_cycles >= 1, op
+
+
+_check_serving_specs()
 
 
 @dataclass
@@ -45,7 +72,9 @@ class CommandBatch:
         """Lower to one ordered HTP transaction: token overrides are
         Redirect analogues, block-table rows SetMMU analogues, page
         copy/zero lists PageCP/PageS analogues.  Serving wire sizes
-        override the Table II defaults via ``nbytes``."""
+        override the Table II defaults via ``nbytes``; every request is
+        ``virtual`` so submitting the transaction models link occupancy
+        without touching any target."""
         txn = HtpTransaction()
         row_bytes = self.block_tables.nbytes // max(
             self.block_tables.shape[0], 1)
@@ -53,16 +82,22 @@ class CommandBatch:
             if self.override[slot] >= 0:
                 txn.add(HtpRequest("Redirect", cpu=slot,
                                    args=(int(self.override[slot]),),
-                                   category="overrides", nbytes=8))
+                                   category="overrides", nbytes=8,
+                                   virtual=True))
             txn.add(HtpRequest("SetMMU", cpu=slot,
                                args=(self.block_tables[slot],),
-                               category="block_tables", nbytes=row_bytes))
+                               category="block_tables", nbytes=row_bytes,
+                               virtual=True))
         for src, dst in self.page_copies:
             txn.add(HtpRequest("PageCP", args=(src, dst),
-                               category="page_cmds", nbytes=8))
+                               category="page_cmds", nbytes=8,
+                               virtual=True))
         for page in self.page_zeros:
             txn.add(HtpRequest("PageS", args=(page, 0),
-                               category="page_cmds", nbytes=8))
+                               category="page_cmds", nbytes=8,
+                               virtual=True))
+        assert all(r.nbytes is not None and r.virtual for r in txn), \
+            "serving analogues must carry explicit wire sizes"
         return txn
 
     def account(self, traffic) -> None:

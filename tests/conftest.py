@@ -2,3 +2,14 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def pytest_configure(config):
+    # Soft per-test timeout so a completion-queue deadlock fails the run
+    # fast instead of hanging it.  Armed only when pytest-timeout is
+    # installed (CI always installs it; local runs without it just skip
+    # the guard) and only if no explicit timeout was requested.
+    if config.pluginmanager.hasplugin("timeout") and \
+            getattr(config.option, "timeout", None) is None:
+        config.option.timeout = 300
+        config.option.timeout_method = "signal"  # soft: test may clean up

@@ -155,5 +155,5 @@ main:
     addi sp, sp, 16
     ret
 """)
-    assert rt.ctl.channel.bytes_by_cat.get("htp:MemW", 0) > 0
-    assert rt.ctl.channel.bytes_by_cat.get("htp:PageS", 0) > 0
+    assert rt.session.channel.bytes_by_cat.get("htp:MemW", 0) > 0
+    assert rt.session.channel.bytes_by_cat.get("htp:PageS", 0) > 0

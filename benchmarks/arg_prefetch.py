@@ -1,0 +1,82 @@
+"""Speculative syscall-arg prefetch: bytes vs round trips, per link.
+
+The lazy argument reader issues one RegR transaction per touched arg —
+k extra round trips per syscall.  Prefetch mode ships a7 + a0..a5 as ONE
+transaction at ``Next`` time and discards unused values — 6 RegR of
+bytes always, zero extra round trips.  The crossover is link-shaped:
+
+  * UART (no per-transaction latency): round trips are free, bytes are
+    the bottleneck → prefetch strictly loses;
+  * PCIe (latency-dominated): every avoided round trip saves the setup
+    latency, the extra RegR bytes are ~free → prefetch wins on link
+    time.
+
+Both the paper's full host-latency model (which charges ``host_us_per_req``
+per request, burying the link win under host time for arg-light
+syscalls) and the link-isolated model (``host_us_per_req=0``) are
+recorded, so the artifact shows where the crossover actually sits.
+
+Artifact: ``results/arg_prefetch.json``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import run_workload, save_json
+
+
+def _measure(wl, argv, files, link, prefetch, host_us_per_req):
+    rt, rep, _ = run_workload(
+        wl, argv, mode="fase", n_cores=1, files=files, link=link,
+        host_us_per_req=host_us_per_req, arg_prefetch=prefetch)
+    return dict(ticks=rep.ticks, bytes=rep.traffic_total,
+                link_stall=rep.stall["uart_ticks"],
+                transactions=rt.session.stats.transactions)
+
+
+def run(quick: bool = False):
+    from repro.core.workloads import graphgen
+    g = graphgen.rmat(4, 8, weights=True)
+    workloads = [("hello", [], None)]
+    if not quick:
+        workloads.append(("bc", ["g.bin", "1", "1"], {"g.bin": g}))
+    rows = []
+    for wl, argv, files in workloads:
+        for link in ("uart", "pcie"):
+            for model, per_req in (("host_full", 12.0), ("link_only", 0.0)):
+                lazy = _measure(wl, argv, files, link, False, per_req)
+                pf = _measure(wl, argv, files, link, True, per_req)
+                row = dict(
+                    workload=wl, link=link, model=model,
+                    lazy=lazy, prefetch=pf,
+                    ticks_saved=lazy["ticks"] - pf["ticks"],
+                    extra_bytes=pf["bytes"] - lazy["bytes"],
+                    round_trips_saved=(lazy["transactions"]
+                                       - pf["transactions"]),
+                    prefetch_wins=pf["ticks"] < lazy["ticks"])
+                rows.append(row)
+                print(f"arg_prefetch,{wl}@{link}/{model},"
+                      f"{row['ticks_saved']},ticks saved "
+                      f"(+{row['extra_bytes']}B, "
+                      f"-{row['round_trips_saved']} round trips, "
+                      f"wins={row['prefetch_wins']})", flush=True)
+    # the crossover verdict: on pure link timing, prefetch trades
+    # bytes (loses on uart) for round trips (wins on pcie)
+    verdict = {
+        link: all(r["prefetch_wins"] == (link == "pcie") for r in rows
+                  if r["link"] == link and r["model"] == "link_only")
+        for link in ("uart", "pcie")}
+    out = dict(quick=quick, rows=rows, link_only_crossover=dict(
+        uart_prefetch_loses=verdict["uart"],
+        pcie_prefetch_wins=verdict["pcie"]))
+    save_json("arg_prefetch.json", out)
+    print(f"arg_prefetch,crossover,1,uart_loses={verdict['uart']} "
+          f"pcie_wins={verdict['pcie']}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

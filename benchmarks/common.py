@@ -15,7 +15,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
                  hfutex=True, files=None, mem=1 << 23, target="pysim",
                  max_ticks=1 << 36, link=None, session="async",
-                 queue_depth=8, coalesce_ticks=50):
+                 queue_depth=8, coalesce_ticks=50, host_us_per_req=12.0,
+                 arg_prefetch=False, ctrl_serialize=False):
     if target == "pysim":
         tgt = PySim(n_cores, mem)
     else:
@@ -23,7 +24,10 @@ def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
         tgt = JaxTarget(n_cores, mem)
     rt = FaseRuntime(tgt, mode=mode, baud=baud, hfutex=hfutex, link=link,
                      session=session, queue_depth=queue_depth,
-                     coalesce_ticks=coalesce_ticks)
+                     coalesce_ticks=coalesce_ticks,
+                     host_us_per_req=host_us_per_req,
+                     arg_prefetch=arg_prefetch,
+                     ctrl_serialize=ctrl_serialize)
     rt.load(build(name), [name] + argv_tail, files=files or {})
     t0 = time.time()
     rep = rt.run(max_ticks=max_ticks)

@@ -1,0 +1,133 @@
+"""Fleet scale-out: aggregate throughput vs device count × link × placement.
+
+The multi-device claim behind ``repro.core.fleet``: independent
+workloads sharded across N modelled FPGAs complete at ~N× the aggregate
+throughput of one device, because devices are independent queue pairs
+over independent links (nothing serialises fleet-wide).  Three panels:
+
+  * ``scale``     — M replicated GAPBS jobs, round-robin placement,
+    swept over device count × link; reports fleet makespan, aggregate
+    jobs/s, and the speedup vs the 1-device fleet on the same link;
+  * ``placement`` — a skewed big/small job mix where the online
+    ``least_loaded`` policy beats ``round_robin`` (and ``affinity``
+    shows sticky key->device routing), same fleet size;
+  * ``uart_identical`` — the degenerate-fleet contract: a 1-device UART
+    fleet must be tick-identical to a plain async FaseRuntime.
+
+Artifact: ``results/fleet_scale.json``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import save_json
+from repro.configs.fase_rocket import FASE_FLEET, fleet_kwargs
+from repro.core.fleet import FleetRuntime, Job
+from repro.core.runtime import FaseRuntime
+from repro.core.target.cpu import CLOCK_HZ
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+
+N_CORES = 1
+MEM = 1 << 23
+
+
+def _fleet(n: int, link: str, placement: str) -> FleetRuntime:
+    kw = fleet_kwargs(FASE_FLEET)
+    kw.update(n_devices=n, link=link, placement=placement)
+    kw.pop("links", None)
+    return FleetRuntime(make_target=lambda: PySim(N_CORES, MEM), **kw)
+
+
+def scale_panel(quick: bool) -> tuple[list, float]:
+    g = graphgen.rmat(4 if quick else 5, 8, weights=True)
+    replicas = 4 if quick else 8
+    counts = (1, 4) if quick else (1, 2, 4)
+    rows = []
+    base = {}
+    scaling_n4_pcie = 0.0
+    for link in ("uart", "pcie"):
+        for n in counts:
+            fr = _fleet(n, link, "round_robin")
+            fr.submit(Job("bc", ["g.bin", "1", "1"], files={"g.bin": g}),
+                      replicas=replicas)
+            rep = fr.run()
+            if n == 1:
+                base[link] = rep.makespan_ticks
+            speedup = base[link] / rep.makespan_ticks
+            if link == "pcie" and n == counts[-1]:
+                scaling_n4_pcie = speedup
+            rows.append(dict(
+                link=link, n_devices=n, placement="round_robin",
+                jobs=replicas, makespan_ticks=rep.makespan_ticks,
+                total_job_ticks=rep.total_job_ticks,
+                jobs_per_s=rep.jobs_per_second, speedup_vs_1dev=speedup,
+                balance=rep.balance, total_bytes=rep.total_bytes))
+            print(f"fleet_scale,bc-x{replicas}@{link}/n{n},"
+                  f"{rep.makespan_ticks},"
+                  f"{rep.jobs_per_second:.2f} jobs/s "
+                  f"speedup={speedup:.2f}x balance={rep.balance:.3f}",
+                  flush=True)
+    return rows, scaling_n4_pcie
+
+
+def placement_panel(quick: bool) -> list:
+    """Skewed mix: big/small jobs alternating — round-robin piles the big
+    jobs onto one board, least-loaded levels the fleet online."""
+    g = graphgen.rmat(4 if quick else 5, 8, weights=True)
+    rows = []
+    for policy in ("round_robin", "least_loaded", "affinity"):
+        fr = _fleet(2, "pcie", policy)
+        for i in range(2):
+            fr.submit(Job("bc", ["g.bin", "1", "2"], files={"g.bin": g},
+                          affinity_key=f"tenant-{2 * i}"))
+            fr.submit(Job("hello", affinity_key=f"tenant-{2 * i + 1}"))
+        rep = fr.run()
+        rows.append(dict(
+            policy=policy, n_devices=2, link="pcie",
+            makespan_ticks=rep.makespan_ticks, balance=rep.balance,
+            per_device_busy={k: v["busy_ticks"]
+                             for k, v in rep.devices.items()},
+            assignment=[(r.job.job_id, r.device_id) for r in rep.jobs]))
+        print(f"fleet_placement,{policy},{rep.makespan_ticks},"
+              f"balance={rep.balance:.3f}", flush=True)
+    return rows
+
+
+def uart_identity_check() -> dict:
+    """1-device UART fleet ≡ plain async FaseRuntime, tick for tick."""
+    fr = _fleet(1, "uart", "round_robin")
+    fr.submit(Job("hello"))
+    fleet_rep = fr.run().jobs[0].report
+    rt = FaseRuntime(PySim(N_CORES, MEM), mode="fase", link="uart",
+                     session="async")
+    rt.load(build("hello"), ["hello"])
+    plain_rep = rt.run(max_ticks=1 << 40)
+    identical = (fleet_rep.ticks == plain_rep.ticks and
+                 fleet_rep.traffic_total == plain_rep.traffic_total and
+                 fleet_rep.stdout == plain_rep.stdout)
+    print(f"fleet_uart_identity,hello,{int(identical)},"
+          f"fleet={fleet_rep.ticks} plain={plain_rep.ticks}", flush=True)
+    return dict(workload="hello", identical=identical,
+                fleet_ticks=fleet_rep.ticks, plain_ticks=plain_rep.ticks)
+
+
+def run(quick: bool = False):
+    scale, scaling_n4_pcie = scale_panel(quick)
+    placement = placement_panel(quick)
+    identity = uart_identity_check()
+    out = dict(quick=quick, clock_hz=CLOCK_HZ, scale=scale,
+               placement=placement, scaling_n4_pcie=scaling_n4_pcie,
+               uart_identical=identity)
+    save_json("fleet_scale.json", out)
+    print(f"fleet_scale,summary,{scaling_n4_pcie:.2f},"
+          f"x aggregate throughput at N=4 on pcie "
+          f"(uart_identical={identity['identical']})", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -2,10 +2,13 @@
 
 ``runtime_kwargs`` filters a target config down to the keyword surface
 of :class:`~repro.core.runtime.FaseRuntime` (link/baud + the queue-pair
-session knobs), so benchmarks can instantiate a runtime straight from a
-registry entry.
+session knobs) and ``fleet_kwargs`` down to
+:class:`~repro.core.fleet.FleetRuntime` (device count, placement policy,
+per-device link mix), so benchmarks can instantiate either straight
+from a registry entry.
 """
-from .registry import FASE_ROCKET, FASE_ROCKET_PCIE  # noqa: F401
+from .registry import (FASE_FLEET, FASE_ROCKET,           # noqa: F401
+                       FASE_ROCKET_PCIE)
 
 CONFIG = FASE_ROCKET
 
@@ -17,4 +20,19 @@ def runtime_kwargs(cfg: dict = FASE_ROCKET) -> dict:
     out = {k: cfg[k] for k in _RUNTIME_KEYS if k in cfg}
     out.update({new: cfg[old] for old, new in _RENAMED.items()
                 if old in cfg})
+    return out
+
+
+_FLEET_KEYS = ("n_devices", "placement")
+_FLEET_RENAMED = {"device_links": "links"}
+
+
+def fleet_kwargs(cfg: dict = FASE_FLEET) -> dict:
+    """Keyword surface of ``FleetRuntime`` from a registry target config
+    (the caller supplies ``make_target``).  Per-device queue pairs reuse
+    the config's link/session/queue-pair knobs."""
+    out = runtime_kwargs(cfg)
+    out.update({k: cfg[k] for k in _FLEET_KEYS if k in cfg})
+    out.update({new: cfg[old] for old, new in _FLEET_RENAMED.items()
+                if old in cfg and cfg[old] is not None})
     return out

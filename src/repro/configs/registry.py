@@ -78,6 +78,15 @@ FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
 FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie", "qp_depth": 16,
                     "qp_coalesce_ticks": 100}
 
+# a fleet of the PCIe target: N modelled FPGAs, each with its own link and
+# queue pair, behind the repro.core.fleet routing/orchestration layer.
+# ``n_devices`` sizes the fleet, ``placement`` picks the job placement
+# policy ("round_robin" | "least_loaded" | "affinity"), and
+# ``device_links`` (one link name per device) models a mixed-link farm —
+# None keeps every board on the config's ``link``.
+FASE_FLEET = {**FASE_ROCKET_PCIE, "n_devices": 4,
+              "placement": "round_robin", "device_links": None}
+
 
 def get(name: str) -> ModelConfig:
     return CONFIGS[name]

@@ -1,3 +1,4 @@
 """FASE core — the paper's contribution: syscall emulation for a compiled
 target processor, split across a minimal CPU interface, the HTP protocol,
-and a host-side runtime.  See DESIGN.md."""
+a host-side runtime, and the multi-device fleet layer
+(:mod:`repro.core.fleet`).  See DESIGN.md and README.md."""

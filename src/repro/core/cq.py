@@ -153,8 +153,12 @@ class AsyncHtpSession(HtpSession):
     def __init__(self, target, channel=None, hfutex=None,
                  direct_mode: bool = False, depth: int = 8,
                  coalesce_ticks: int = 50,
-                 cq_capacity: int = CQ_CAPACITY):
-        super().__init__(target, channel, hfutex, direct_mode)
+                 cq_capacity: int = CQ_CAPACITY,
+                 ctrl_serialize: bool = False):
+        # ctrl_serialize only reaches the delegated (serial-link) path:
+        # the pipelined engine already serialises per-stream ctrl slices
+        super().__init__(target, channel, hfutex, direct_mode,
+                         ctrl_serialize)
         assert depth >= 1
         self.depth = depth
         self.coalesce_ticks = max(coalesce_ticks, 0)
@@ -245,7 +249,7 @@ class AsyncHtpSession(HtpSession):
             ch.account(nbytes, f"htp:{req.op}")
             if req.category:
                 ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
-            self.stats.count(req.op)
+            self.stats.count(req.op, req.virtual)
             self.stats.controller_cycles += req.ctrl_cycles
             cum_bytes += nbytes
             arrive = wire_start + ch.ticks_for_bytes(cum_bytes)

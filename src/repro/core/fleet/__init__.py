@@ -1,0 +1,41 @@
+"""Multi-device fleet layer: sharded FPGA targets behind one routing and
+orchestration subsystem (ROADMAP: "multi-channel scale-out").
+
+A single FASE deployment is one queue pair: one target behind one
+:class:`~repro.core.channel.Channel`, driven by one
+:class:`~repro.core.cq.AsyncHtpSession`.  A production validation farm is
+N of those — FireSim-style: many emulated devices serving independent
+workloads concurrently, each with its own link, its own submission
+streams, and its own completion queue.  This package is that layer:
+
+  * :class:`~repro.core.fleet.device.Device` — one modelled FPGA: a
+    target factory, a dedicated channel, the device's
+    :class:`~repro.core.cq.AsyncHtpSession` queue pair, and cumulative
+    per-device stats (the device "clock" is its serial occupancy);
+  * :mod:`~repro.core.fleet.placement` — pluggable placement policies
+    (``round_robin`` / ``least_loaded`` / ``affinity``) deciding which
+    device owns a job or a serving slot;
+  * :class:`~repro.core.fleet.router.FleetRouter` — the session-shaped
+    routing front end: submission streams are re-keyed ``(device, hart)``
+    and each transaction is forwarded to the owning device's queue pair
+    (a one-device router is tick-identical to using its session
+    directly);
+  * :class:`~repro.core.fleet.runtime.FleetRuntime` — the orchestrator:
+    shards replicated / multi-process workloads across the fleet via the
+    placement policy, runs each job through a full
+    :class:`~repro.core.runtime.FaseRuntime` over the owning device's
+    queue pair, and aggregates completions and stats into a
+    :class:`~repro.core.fleet.runtime.FleetReport`.
+
+Devices are independent: nothing serialises across device boundaries
+except explicit dependency tokens (a token's ``tick`` is modelled time,
+which every device shares as a unit), so aggregate throughput on
+independent workloads scales with device count — the
+``benchmarks/fleet_scale.py`` claim.
+"""
+from .device import Device, DeviceStats                     # noqa: F401
+from .placement import (POLICIES, AffinityPolicy,           # noqa: F401
+                        LeastLoadedPolicy, PlacementPolicy,
+                        RoundRobinPolicy, make_policy)
+from .router import FleetRouter                             # noqa: F401
+from .runtime import FleetReport, FleetRuntime, Job         # noqa: F401

@@ -1,0 +1,143 @@
+"""One modelled FPGA of the fleet: target + channel + queue pair + stats.
+
+A :class:`Device` bundles everything one emulated board owns in a
+sharded deployment: a *target factory* (each job gets a freshly imaged
+target, like re-flashing a board between runs), the device's own
+:class:`~repro.core.channel.Channel` backend, the
+:class:`~repro.core.cq.AsyncHtpSession` queue pair driving it, and
+cumulative :class:`DeviceStats`.  The queue pair is provisioned lazily
+and re-provisioned per job; the stats — in particular ``busy_ticks``,
+the device's serial occupancy "clock" — survive re-provisioning, which
+is what the ``least_loaded`` placement policy balances on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..channel import make_channel
+from ..cq import AsyncHtpSession
+from ..hfutex import HFutexCache
+from ..session import HtpSession
+
+
+@dataclass
+class DeviceStats:
+    """Cumulative per-device counters across every job/queue pair."""
+
+    jobs: int = 0
+    busy_ticks: int = 0          # serial occupancy: sum of job makespans
+    transactions: int = 0
+    wire_bytes: int = 0
+    exceptions: int = 0
+    bytes_by_cat: dict = field(default_factory=dict)
+
+    def absorb_session(self, session) -> None:
+        """Fold one retired queue pair's counters into the device."""
+        self.transactions += session.stats.transactions
+        self.wire_bytes += session.channel.total_bytes
+        for cat, n in session.channel.bytes_by_cat.items():
+            self.bytes_by_cat[cat] = self.bytes_by_cat.get(cat, 0) + n
+
+    def as_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["bytes_by_cat"] = dict(self.bytes_by_cat)
+        return d
+
+
+class Device:
+    """One modelled FPGA: (Target, Channel, AsyncHtpSession) + stats."""
+
+    def __init__(self, device_id, make_target, link: str = "pcie",
+                 baud: int = 921600, session: str = "async",
+                 queue_depth: int = 8, coalesce_ticks: int = 50,
+                 hfutex: bool = True, direct_mode: bool = False,
+                 label: str | None = None):
+        assert session in ("async", "sync")
+        self.id = device_id
+        self.make_target = make_target
+        self.link = link
+        self.baud = baud
+        self.session_kind = session
+        self.queue_depth = queue_depth
+        self.coalesce_ticks = coalesce_ticks
+        self.hfutex = hfutex
+        self.direct_mode = direct_mode
+        self.label = label or f"dev{device_id}@{link}"
+        self.stats = DeviceStats()
+        self._session: HtpSession | None = None
+
+    # -- queue pair -----------------------------------------------------
+    def provision(self) -> HtpSession:
+        """(Re)image the device: fresh target, channel and queue pair.
+        A live queue pair being replaced folds into the device stats
+        first, so no traffic is ever dropped.
+
+        The construction mirrors :class:`~repro.core.runtime.FaseRuntime`
+        exactly, which is what keeps a one-device fleet tick-identical to
+        a plain runtime (``tests/test_fleet.py`` pins this down)."""
+        if self._session is not None:
+            self.stats.absorb_session(self._session)
+        target = self.make_target()
+        ch = make_channel(self.link, baud=self.baud)
+        hf = HFutexCache(target.n_cores, enabled=self.hfutex)
+        if self.session_kind == "async":
+            self._session = AsyncHtpSession(
+                target, ch, hf, direct_mode=self.direct_mode,
+                depth=self.queue_depth,
+                coalesce_ticks=self.coalesce_ticks)
+        else:
+            self._session = HtpSession(target, ch, hf,
+                                       direct_mode=self.direct_mode)
+        return self._session
+
+    @property
+    def provisioned(self) -> bool:
+        return self._session is not None
+
+    def counters(self) -> DeviceStats:
+        """Retired-plus-live counters, via the same fold as ``retire``
+        (one folding implementation, two consumers), without mutating
+        the device or provisioning anything."""
+        out = DeviceStats(**self.stats.as_dict())
+        if self._session is not None:
+            out.absorb_session(self._session)
+        return out
+
+    @property
+    def session(self) -> HtpSession:
+        """The device's current queue pair (provisioned on first use)."""
+        if self._session is None:
+            self.provision()
+        return self._session
+
+    @property
+    def clock(self) -> int:
+        """Device-serial modelled time: when this board frees up."""
+        return self.stats.busy_ticks
+
+    # -- job execution --------------------------------------------------
+    def make_runtime(self, **runtime_kwargs):
+        """A fresh :class:`~repro.core.runtime.FaseRuntime` over a fresh
+        queue pair (the previous pair's counters are folded into the
+        device stats first)."""
+        from ..runtime import FaseRuntime   # runtime layer sits above us
+        sess = self.provision()
+        return FaseRuntime(sess.t, mode="fase", session_obj=sess,
+                           **runtime_kwargs)
+
+    def retire(self, report) -> None:
+        """Account one finished job: the device stays busy for its whole
+        modelled makespan (serial occupancy — one job at a time per
+        board), and the job's queue-pair counters fold into the device
+        stats (and only here — ``provision`` absorbs a pair it replaces,
+        so nothing is counted twice)."""
+        self.stats.jobs += 1
+        self.stats.busy_ticks += report.ticks
+        self.stats.exceptions += report.sched.get("exceptions", 0)
+        if self._session is not None:
+            self.stats.absorb_session(self._session)
+            self._session = None
+
+    def __repr__(self):
+        return (f"Device({self.id!r}, link={self.link!r}, "
+                f"jobs={self.stats.jobs}, busy={self.stats.busy_ticks})")

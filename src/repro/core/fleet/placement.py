@@ -1,0 +1,94 @@
+"""Pluggable placement policies: which device owns a job / serving slot.
+
+A policy sees the candidate :class:`~repro.core.fleet.device.Device`
+list in fleet order and returns the owner.  All three policies are
+deterministic — fleet runs must reproduce tick-for-tick across
+processes, so the affinity hash is a fixed FNV-1a over the key's string
+form (never Python's salted ``hash``).
+
+  * ``round_robin``  — cycles the fleet in submission order; ideal for
+    homogeneous replicated jobs.
+  * ``least_loaded`` — online greedy: place on the device with the
+    smallest serial-occupancy clock (ties break on fleet order).  Beats
+    round-robin when job durations are skewed.
+  * ``affinity``     — sticky: the same ``affinity_key`` always lands on
+    the same device (page-cache / re-image locality across a fleet);
+    keyless jobs fall back to round-robin.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+
+FNV_OFFSET, FNV_PRIME = 0xCBF29CE484222325, 0x100000001B3
+
+
+def stable_hash(key) -> int:
+    """Process-independent 64-bit FNV-1a of ``str(key)``."""
+    h = FNV_OFFSET
+    for b in str(key).encode():
+        h = ((h ^ b) * FNV_PRIME) & ((1 << 64) - 1)
+    return h
+
+
+class PlacementPolicy(ABC):
+    name = "policy"
+
+    @abstractmethod
+    def place(self, job, devices: list):
+        """Return the owning device for ``job`` out of ``devices``."""
+
+    def reset(self):
+        """Forget inter-job state (fresh fleet run)."""
+
+
+class RoundRobinPolicy(PlacementPolicy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def place(self, job, devices):
+        dev = devices[self._i % len(devices)]
+        self._i += 1
+        return dev
+
+    def reset(self):
+        self._i = 0
+
+
+class LeastLoadedPolicy(PlacementPolicy):
+    name = "least_loaded"
+
+    def place(self, job, devices):
+        return min(enumerate(devices), key=lambda e: (e[1].clock, e[0]))[1]
+
+
+class AffinityPolicy(PlacementPolicy):
+    name = "affinity"
+
+    def __init__(self):
+        self._fallback = RoundRobinPolicy()
+
+    def place(self, job, devices):
+        key = getattr(job, "affinity_key", None)
+        if key is None:
+            return self._fallback.place(job, devices)
+        return devices[stable_hash(key) % len(devices)]
+
+    def reset(self):
+        self._fallback.reset()
+
+
+POLICIES = {p.name: p for p in
+            (RoundRobinPolicy, LeastLoadedPolicy, AffinityPolicy)}
+
+
+def make_policy(name) -> PlacementPolicy:
+    """Instantiate a policy by registry name (instances pass through)."""
+    if isinstance(name, PlacementPolicy):
+        return name
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown placement policy {name!r} "
+                       f"(have {sorted(POLICIES)})") from None

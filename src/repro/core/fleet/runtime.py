@@ -1,0 +1,169 @@
+"""FleetRuntime: shard whole workloads across N modelled FPGAs.
+
+The orchestrator of the fleet layer.  Jobs (replicated or independent
+multi-process workloads) queue in submission order; at each placement
+the pluggable policy picks the owning :class:`Device`, a fresh
+:class:`~repro.core.runtime.FaseRuntime` is built *over that device's
+queue pair* (session injection — the runtime's HTP goes through the
+device's channel), the job runs to completion in modelled time, and the
+device's serial-occupancy clock advances by the job's makespan.  Devices
+are independent boards, so fleet makespan is the max device clock and
+aggregate throughput on independent workloads scales with device count
+(``benchmarks/fleet_scale.py``).
+
+Everything is deterministic: job order, placement (stable hashes only)
+and each job's modelled run reproduce tick-for-tick across processes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..target.cpu import CLOCK_HZ
+from ..workloads import build
+from .device import Device
+from .placement import make_policy
+from .router import FleetRouter
+
+
+@dataclass
+class Job:
+    """One schedulable workload instance."""
+
+    name: str                     # workloads.build() key ("hello", "bc", …)
+    argv: list = field(default_factory=list)   # argv tail (argv[0] = name)
+    files: dict | None = None
+    stdin: bytes = b""
+    affinity_key: object = None   # placement stickiness (affinity policy)
+    max_ticks: int = 1 << 40
+    image: object = None          # pre-assembled Image overrides `name`
+    job_id: int = -1
+
+
+@dataclass
+class JobResult:
+    job: Job
+    device_id: object
+    start_tick: int               # owning device's clock at placement
+    done_tick: int                # … after the job retired
+    report: object                # the job's full FaseRuntime Report
+
+
+@dataclass
+class FleetReport:
+    """Aggregate completion/stats view across every device."""
+
+    n_devices: int
+    placement: str
+    jobs: list = field(default_factory=list)        # JobResult, job order
+    devices: dict = field(default_factory=dict)     # id -> DeviceStats dict
+    busy_deltas: dict = field(default_factory=dict)  # id -> this-run ticks
+    makespan_ticks: int = 0       # this run's completion horizon
+    total_job_ticks: int = 0      # sum of per-job makespans
+    total_bytes: int = 0
+    total_exceptions: int = 0
+
+    @property
+    def makespan_seconds(self) -> float:
+        return self.makespan_ticks / CLOCK_HZ
+
+    @property
+    def jobs_per_second(self) -> float:
+        """Aggregate fleet throughput in modelled time."""
+        return len(self.jobs) / max(self.makespan_seconds, 1e-12)
+
+    @property
+    def balance(self) -> float:
+        """mean/max device occupancy this run — 1.0 is a level fleet."""
+        if not self.busy_deltas or self.makespan_ticks == 0:
+            return 1.0
+        mean = sum(self.busy_deltas.values()) / len(self.busy_deltas)
+        return mean / self.makespan_ticks
+
+
+class FleetRuntime:
+    """Orchestrate N devices: placement, execution, aggregation."""
+
+    def __init__(self, n_devices: int = 1, make_target=None,
+                 devices: list[Device] | None = None,
+                 placement="round_robin", link: str = "pcie",
+                 links: list | None = None, baud: int = 921600,
+                 session: str = "async", queue_depth: int = 8,
+                 coalesce_ticks: int = 50, hfutex: bool = True,
+                 runtime_kwargs: dict | None = None):
+        if devices is None:
+            assert make_target is not None, \
+                "need make_target (device factory) or explicit devices"
+            if links is not None:
+                assert len(links) == n_devices, "one link per device"
+            devices = [Device(i, make_target,
+                              link=links[i] if links else link, baud=baud,
+                              session=session, queue_depth=queue_depth,
+                              coalesce_ticks=coalesce_ticks, hfutex=hfutex)
+                       for i in range(n_devices)]
+        self.devices = devices
+        self.policy = make_policy(placement)
+        self.runtime_kwargs = dict(runtime_kwargs or {})
+        self.queue: list[Job] = []
+        self._next_id = 0
+
+    # -- submission ------------------------------------------------------
+    def submit(self, job: Job, replicas: int = 1) -> list[Job]:
+        """Queue ``job`` (``replicas`` > 1 queues that many independent
+        copies — the replicated-workload path)."""
+        out = []
+        for r in range(replicas):
+            j = job if replicas == 1 else Job(
+                job.name, list(job.argv), job.files, job.stdin,
+                job.affinity_key, job.max_ticks, job.image)
+            j.job_id = self._next_id
+            self._next_id += 1
+            self.queue.append(j)
+            out.append(j)
+        return out
+
+    # -- orchestration ---------------------------------------------------
+    def run_job(self, device: Device, job: Job) -> JobResult:
+        """Run one job on one device (fresh queue pair, full runtime)."""
+        rt = device.make_runtime(**self.runtime_kwargs)
+        image = job.image if job.image is not None else build(job.name)
+        rt.load(image, [job.name] + list(job.argv), stdin=job.stdin,
+                files=job.files or {})
+        start = device.clock
+        rep = rt.run(max_ticks=job.max_ticks)
+        device.retire(rep)
+        return JobResult(job, device.id, start, device.clock, rep)
+
+    def run(self) -> FleetReport:
+        """Place and run every queued job; aggregate across devices.
+
+        The report covers *this* batch of jobs: on a warm fleet (repeat
+        submit/run cycles) byte/exception totals are per-run deltas and
+        the makespan is the longest per-device busy span this batch
+        added (each board starts the batch from its own clock), so
+        throughput is never diluted by earlier batches.  ``devices``
+        still carries the cumulative :class:`DeviceStats` (the boards'
+        lifetime state)."""
+        start = {d.id: (d.clock, d.stats.wire_bytes, d.stats.exceptions)
+                 for d in self.devices}
+        results = []
+        for job in self.queue:
+            dev = self.policy.place(job, self.devices)
+            results.append(self.run_job(dev, job))
+        self.queue = []
+        rep = FleetReport(n_devices=len(self.devices),
+                          placement=self.policy.name, jobs=results)
+        for d in self.devices:
+            rep.devices[d.id] = d.stats.as_dict()
+            rep.busy_deltas[d.id] = d.clock - start[d.id][0]
+            rep.makespan_ticks = max(rep.makespan_ticks,
+                                     rep.busy_deltas[d.id])
+            rep.total_bytes += d.stats.wire_bytes - start[d.id][1]
+            rep.total_exceptions += d.stats.exceptions - start[d.id][2]
+        rep.total_job_ticks = sum(r.report.ticks for r in results)
+        return rep
+
+    # -- session-level access -------------------------------------------
+    def router(self) -> FleetRouter:
+        """A (device, hart)-keyed routing front end over this fleet's
+        live queue pairs (serving-path integration)."""
+        return FleetRouter(self.devices)

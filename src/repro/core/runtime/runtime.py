@@ -82,23 +82,44 @@ class FaseRuntime:
                  link: str | None = None,
                  host_base_us: float = 35.0, host_us_per_req: float = 12.0,
                  fault_preload: int = 16, session: str = "async",
-                 queue_depth: int = 8, coalesce_ticks: int = 50):
+                 queue_depth: int = 8, coalesce_ticks: int = 50,
+                 ctrl_serialize: bool = False, arg_prefetch: bool = False,
+                 session_obj=None, traffic_hook=None):
         assert mode in ("fase", "oracle")
         assert session in ("async", "sync")
         self.target = target
         self.mode = mode
-        self.link = link or ("uart" if mode == "fase" else "oracle")
-        ch = chmod.make_channel(self.link, baud=baud,
-                                enabled=(mode == "fase"))
-        hf = HFutexCache(target.n_cores, enabled=hfutex)
-        if session == "async":
-            self.session = AsyncHtpSession(target, ch, hf,
-                                           direct_mode=direct_mode,
-                                           depth=queue_depth,
-                                           coalesce_ticks=coalesce_ticks)
+        if session_obj is not None:
+            # fleet path: the runtime drives an externally-provisioned
+            # queue pair (a Device's), so its HTP serialises through that
+            # device's own channel instead of building one here
+            assert mode == "fase", "injected queue pairs model a live link"
+            assert session_obj.t is target, \
+                "injected session must wrap this runtime's target"
+            self.session = session_obj
+            self.link = session_obj.channel.name
         else:
-            self.session = HtpSession(target, ch, hf,
-                                      direct_mode=direct_mode)
+            self.link = link or ("uart" if mode == "fase" else "oracle")
+            ch = chmod.make_channel(self.link, baud=baud,
+                                    enabled=(mode == "fase"))
+            hf = HFutexCache(target.n_cores, enabled=hfutex)
+            if session == "async":
+                self.session = AsyncHtpSession(
+                    target, ch, hf, direct_mode=direct_mode,
+                    depth=queue_depth, coalesce_ticks=coalesce_ticks,
+                    ctrl_serialize=ctrl_serialize)
+            else:
+                self.session = HtpSession(target, ch, hf,
+                                          direct_mode=direct_mode,
+                                          ctrl_serialize=ctrl_serialize)
+        # speculative syscall-arg prefetch: read a7 + a0..a5 as ONE
+        # transaction at Next time instead of lazy per-arg round trips —
+        # trades bytes for round trips (wins on latency-dominated links)
+        self.arg_prefetch = arg_prefetch
+        # co-residency hook: called with the modelled time every scheduler
+        # iteration so background (e.g. Layer-B serving) traffic can be
+        # injected onto this runtime's shared link
+        self.traffic_hook = traffic_hook
         self.alloc = PageAllocator(target.mem_bytes)
         self.vm = VirtualMemory(self.session, self.alloc,
                                 fault_preload=fault_preload)
@@ -136,7 +157,11 @@ class FaseRuntime:
         return t * (1_000_000_000 // CLOCK_HZ)
 
     def _total_requests(self) -> int:
-        return sum(self.session.stats.requests.values())
+        # virtual (Layer-B serving analogue) requests share this link but
+        # are processed by the serving engine's own host loop, not the
+        # FASE exception loop — they must not bill Layer-A host latency
+        s = self.session.stats
+        return sum(s.requests.values()) - s.virtual_requests
 
     def charge(self, t: int, args, kcost_key: str, extra_kcost: int) -> int:
         """Charge host-runtime latency (fase) or kernel cost (oracle)."""
@@ -345,6 +370,8 @@ class FaseRuntime:
                     f"{ {k: list(v) for k, v in self.sched.futex_q.items()} }")
             self.target.run()
             now = self.target.get_ticks()
+            if self.traffic_hook is not None:
+                self.traffic_hook(now)
             if now > max_ticks:
                 raise TimeoutError(f"exceeded {max_ticks} target ticks")
             if self.stats["exceptions"] > max_exceptions:

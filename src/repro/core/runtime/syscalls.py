@@ -59,24 +59,44 @@ class SyscallError(Exception):
 
 def dispatch(rt, cpu: int, thread, epc: int, t0: int) -> None:
     """Handle the ecall raised by ``thread`` on ``cpu`` trapped at ``t0``."""
-    res = rt.session.submit(HtpTransaction().reg_read(cpu, 17), t0,
-                            stream=cpu)                       # a7
+    # snapshot the request counter BEFORE the a7 read: the host-latency
+    # model bills exactly the requests this syscall's handling issues
+    # (historically req0 started at 0, so every syscall re-billed all
+    # requests since boot — quadratic host time in the syscall count)
+    req0 = rt._total_requests()
+    if rt.arg_prefetch:
+        # speculative prefetch: the full a7 + a0..a5 register file crosses
+        # the wire as ONE transaction at Next time; unused values are
+        # discarded.  More bytes, fewer round trips — the crossover per
+        # link is measured by benchmarks/arg_prefetch.py.
+        txn = HtpTransaction().reg_read(cpu, 17, "argprefetch")
+        for i in range(6):
+            txn.reg_read(cpu, 10 + i, "argprefetch")
+        res = rt.session.submit(txn, t0, stream=cpu)
+        prefetched = dict(enumerate(res.values[1:]))
+    else:
+        res = rt.session.submit(HtpTransaction().reg_read(cpu, 17), t0,
+                                stream=cpu)                   # a7
+        prefetched = None
     t, nr = res.done, res.values[0]
     name = NAME.get(nr, f"sys_{nr}")
     rt.stats["syscalls"][name] = rt.stats["syscalls"].get(name, 0) + 1
-    args = _ArgReader(rt, cpu, name)
+    args = _ArgReader(rt, cpu, name, prefetched)
     args.t = t
+    args.req0 = req0
     fn = _HANDLERS.get(name, _sys_enosys)
     fn(rt, cpu, thread, epc, args)
 
 
 class _ArgReader:
-    """Lazily reads a0..a5 through the Reg ports with accounting."""
+    """Reads a0..a5 through the Reg ports with accounting — lazily (one
+    RegR transaction per first-touched arg) or from the speculative
+    prefetch (all six already local, no further wire traffic)."""
 
-    def __init__(self, rt, cpu, cat):
+    def __init__(self, rt, cpu, cat, prefetched: dict | None = None):
         self.rt, self.cpu, self.cat = rt, cpu, cat
         self.t = 0
-        self._vals = {}
+        self._vals = dict(prefetched) if prefetched else {}
 
     def __getitem__(self, i) -> int:
         if i not in self._vals:

@@ -175,9 +175,16 @@ class SessionStats:
     transactions: int = 0
     controller_cycles: int = 0
     uart_ticks: int = 0          # historical name: link wait+wire ticks
+    #: Layer-B serving analogues on a shared session.  They occupy the
+    #: link but are never processed by the Layer-A host runtime loop, so
+    #: the runtime's host-latency model must not bill them (a plain FASE
+    #: run has zero — existing golden ticks are unaffected).
+    virtual_requests: int = 0
 
-    def count(self, name):
+    def count(self, name, virtual: bool = False):
         self.requests[name] = self.requests.get(name, 0) + 1
+        if virtual:
+            self.virtual_requests += 1
 
 
 class HtpSession:
@@ -185,12 +192,19 @@ class HtpSession:
 
     def __init__(self, target, channel: Channel | None = None,
                  hfutex: HFutexCache | None = None,
-                 direct_mode: bool = False):
+                 direct_mode: bool = False, ctrl_serialize: bool = False):
         self.t = target              # None = timing/accounting-only session
         self.channel = channel or UartChannel()
         self.hfutex = hfutex or HFutexCache(
             target.n_cores if target is not None else 0)
         self.direct_mode = direct_mode   # per-port baseline (no HTP)
+        # ``ctrl_serialize`` backports the async engine's per-hart
+        # controller slice (``ctrl_free``) into the synchronous
+        # arithmetic: controller cycles of different transactions can no
+        # longer overlap unphysically on one hart.  Off by default — the
+        # historical arithmetic is the UART golden-tick contract.
+        self.ctrl_serialize = ctrl_serialize
+        self._ctrl_free: dict = {}       # hart -> controller-slice free tick
         self.stats = SessionStats()
 
     # ------------------------------------------------------------------
@@ -218,21 +232,37 @@ class HtpSession:
             ch.account(nbytes, f"htp:{req.op}")
             if req.category:
                 ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
-            self.stats.count(req.op)
+            self.stats.count(req.op, req.virtual)
             self.stats.controller_cycles += req.ctrl_cycles
             cum_bytes += nbytes
-            if enabled:
+            if not enabled:
+                done = at
+            elif self.ctrl_serialize:
+                # per-hart controller slice: the request executes when its
+                # byte prefix has arrived AND the hart's controller is
+                # free — transactions on one hart never overlap their
+                # controller cycles (the async engine's discipline).
+                arrive = start + ch.ticks_for_bytes(cum_bytes)
+                done = max(arrive, self._ctrl_free.get(req.cpu, 0)) \
+                    + req.ctrl_cycles
+                self._ctrl_free[req.cpu] = done
+            else:
                 cum_cycles += req.ctrl_cycles
                 done = start + ch.ticks_for_bytes(cum_bytes) + cum_cycles
-            else:
-                done = at
             result.ticks.append(done)
             result.values.append(self._apply(req, done))
         ch.end(start, cum_bytes)
         if enabled:
             wire_done = start + ch.ticks_for_bytes(cum_bytes)
             self.stats.uart_ticks += max(0, wire_done - at)
-        result.done = result.ticks[-1] if result.ticks else at
+        if not result.ticks:
+            result.done = at
+        elif self.ctrl_serialize:
+            # multi-hart batches may retire per-slice out of request
+            # order; the transaction is done when its last slice is
+            result.done = max(result.ticks)
+        else:
+            result.done = result.ticks[-1]
         return result
 
     # ------------------------------------------------------------------

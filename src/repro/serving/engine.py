@@ -69,16 +69,36 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
                  max_seq: int = 512, poll_every: int = 4, seed: int = 0,
                  htp_session: AsyncHtpSession | None = None,
-                 link: str = "pcie"):
+                 link: str = "pcie", fleet=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.poll_every = poll_every
         # command batches dispatch on the "serve" stream; pass a FASE
-        # runtime's session to share (and contend on) its modelled link
-        self.htp = htp_session or AsyncHtpSession(
-            None, make_channel(link))
+        # runtime's session to share (and contend on) its modelled link,
+        # or a fleet (FleetRuntime / FleetRouter) to shard decode slots
+        # across N devices — each device then carries only its own slots'
+        # command traffic on its own link, on stream (device, "serve")
+        self.router = None
+        self._dev_slots: list = []    # (device_id, [its slot indices])
+        if fleet is not None:
+            assert htp_session is None, \
+                "htp_session and fleet are mutually exclusive: a fleet " \
+                "routes every batch to its own devices' links"
+            self.router = fleet.router() if hasattr(fleet, "router") \
+                else fleet
+            dev_ids = list(self.router.devices)
+            # sticky slot->device sharding (affinity): a slot's KV pages
+            # and block tables live on one board for its whole lifetime
+            self._dev_slots = [
+                (dev_ids[k], [s for s in range(slots)
+                              if s % len(dev_ids) == k])
+                for k in range(len(dev_ids))]
+            self.htp = None
+        else:
+            self.htp = htp_session or AsyncHtpSession(
+                None, make_channel(link))
         self.link_tick = 0          # modelled completion of the last batch
         self.state = M.make_decode_state(cfg, slots, max_seq)
         self.pages_per_seq = self.state["block_tables"].shape[1]
@@ -104,6 +124,36 @@ class ServeEngine:
             return state, nxt, stop_mask, out_buf
 
         self._step = jax.jit(step_fn, donate_argnums=(1, 7))
+
+    # -- dispatch --------------------------------------------------------
+    def _dispatch(self, cb: CommandBatch) -> int:
+        """Ship one step's command batch over the modelled link(s).
+
+        Single-session: the whole batch is one wire transaction on the
+        ``"serve"`` stream.  Fleet: the batch is sharded by owning device
+        — each device receives a sub-batch of its slots' overrides /
+        block-table rows (page commands split round-robin) on its own
+        ``(device, "serve")`` stream, and the step's link completion is
+        the slowest device's."""
+        if self.router is None:
+            return self.htp.submit(cb.to_transaction(), self.link_tick,
+                                   stream=SERVE_STREAM).done
+        done = self.link_tick
+        n = len(self._dev_slots)
+        for k, (dev, slots) in enumerate(self._dev_slots):
+            sub = CommandBatch(
+                override=cb.override[slots], eos=cb.eos[slots],
+                max_lens=cb.max_lens[slots],
+                block_tables=cb.block_tables[slots],
+                page_copies=list(cb.page_copies[k::n]),
+                page_zeros=list(cb.page_zeros[k::n]))
+            txn = sub.to_transaction()
+            if not txn.requests:
+                continue
+            res = self.router.submit(txn, self.link_tick,
+                                     stream=(dev, SERVE_STREAM))
+            done = max(done, res.done)
+        return done
 
     # -- scheduling ------------------------------------------------------
     def submit(self, req: Request):
@@ -154,11 +204,9 @@ class ServeEngine:
                     req.rid, self.pages_per_seq)
             cb.page_copies, cb.page_zeros = self.kv.drain_commands()
             cb.account(self.traffic)
-            # dispatch over the modelled device link: one wire batch per
-            # decode step, FIFO on the serving stream
-            self.link_tick = self.htp.submit(
-                cb.to_transaction(), self.link_tick,
-                stream=SERVE_STREAM).done
+            # dispatch over the modelled device link(s): one wire batch
+            # per decode step, FIFO on the serving stream(s)
+            self.link_tick = self._dispatch(cb)
             self.state["block_tables"] = jnp.asarray(cb.block_tables)
             self.state, cur, self._stop_mask, out_buf = self._step(
                 self.params, self.state, cur,

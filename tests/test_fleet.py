@@ -1,0 +1,340 @@
+"""Fleet layer: (device, hart) stream routing, placement-policy
+correctness, cross-run determinism, single-device tick-equivalence, and
+the satellite features that ride the same PR (speculative arg prefetch,
+the sync ctrl_free backport, serving fleet sharding)."""
+import pytest
+
+from repro.core.channel import PcieChannel, UartChannel
+from repro.core.cq import AsyncHtpSession
+from repro.core.fleet import (Device, FleetRouter, FleetRuntime, Job,
+                              make_policy)
+from repro.core.fleet.placement import stable_hash
+from repro.core.runtime import FaseRuntime
+from repro.core.session import HtpSession, HtpTransaction
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+
+
+def _ctx_save(cpu):
+    txn = HtpTransaction()
+    for i in range(1, 32):
+        txn.reg_read(cpu, i, "ctxsw")
+    return txn
+
+
+def _mk_devices(n, link="pcie", n_cores=2, mem=1 << 20):
+    return [Device(i, lambda: PySim(n_cores, mem), link=link)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# router: (device, hart) keying, isolation, single-device equivalence
+# ---------------------------------------------------------------------------
+def test_router_single_device_tick_identical_to_session():
+    """A one-device fleet router is a drop-in session: same transaction
+    trace, same per-request ticks, bytes and completion order."""
+    def trace(submit):
+        out, at = [], 0
+        for cpu in (0, 1):
+            r = submit(_ctx_save(cpu), at, cpu)
+            out.append((tuple(r.ticks), r.done))
+            at = r.done
+        r = submit(HtpTransaction().tick().utick(0), at, 0)
+        out.append((tuple(r.ticks), r.done))
+        return out
+    router = FleetRouter(_mk_devices(1, link="uart"))
+    sess = AsyncHtpSession(PySim(2, 1 << 20), UartChannel())
+    got_fleet = trace(lambda txn, at, cpu:
+                      router.submit(txn, at, stream=(0, cpu)))
+    got_plain = trace(lambda txn, at, cpu:
+                      sess.submit(txn, at, stream=cpu))
+    assert got_fleet == got_plain
+    assert router.stats()["total_bytes"] == sess.channel.total_bytes
+    # bare (non-tuple) stream keys route to the first device
+    r = router.submit(HtpTransaction().reg_read(0, 1), 0, stream=0)
+    assert r.done > 0
+
+
+def test_device_hart_stream_isolation():
+    """Streams on different devices never contend: identical transactions
+    submitted at the same tick on two devices complete at the same tick
+    (independent wires), while two streams of ONE device serialise on its
+    shared wire."""
+    router = FleetRouter(_mk_devices(2))
+    r0 = router.submit(_ctx_save(0), 0, stream=(0, 0))
+    r1 = router.submit(_ctx_save(0), 0, stream=(1, 0))
+    assert r0.done == r1.done                 # no cross-device wire
+    per_dev = router.stats()["per_device"]
+    assert per_dev[0]["transactions"] == per_dev[1]["transactions"] == 1
+    # same trace through ONE device's two harts: the shared wire
+    # serialises the second transaction's bytes behind the first
+    one = FleetRouter(_mk_devices(1))
+    a = one.submit(_ctx_save(0), 0, stream=(0, 0))
+    b = one.submit(_ctx_save(1), 0, stream=(0, 1))
+    assert b.done > a.done                    # queued, not parallel
+
+
+def test_cross_device_dependency_tokens():
+    """Tokens are fleet-wide time: a dep token from device 0 delays a
+    device-1 submission past its completion tick."""
+    router = FleetRouter(_mk_devices(2))
+    r0 = router.submit(_ctx_save(0), 0, stream=(0, 0))
+    r1 = router.submit(HtpTransaction().reg_read(0, 1), 0,
+                       stream=(1, 0), deps=(r0.token,))
+    assert r1.done >= r0.done
+    assert len(router.tail_tokens()) == 2
+    assert router.quiesce_tick() >= max(r0.done, r1.done)
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+def test_placement_policy_correctness():
+    devs = _mk_devices(4)
+    rr = make_policy("round_robin")
+    order = [rr.place(None, devs).id for _ in range(6)]
+    assert order == [0, 1, 2, 3, 0, 1]
+
+    devs[0].stats.busy_ticks = 100
+    devs[1].stats.busy_ticks = 5
+    devs[2].stats.busy_ticks = 50
+    ll = make_policy("least_loaded")
+    assert ll.place(None, devs).id == 3       # untouched board wins
+    devs[3].stats.busy_ticks = 500
+    assert ll.place(None, devs).id == 1
+
+    af = make_policy("affinity")
+    j1, j2 = Job("hello", affinity_key="tenant-a"), \
+        Job("hello", affinity_key="tenant-a")
+    assert af.place(j1, devs).id == af.place(j2, devs).id   # sticky
+    # keyless jobs fall back to round-robin
+    ks = [af.place(Job("hello"), devs).id for _ in range(4)]
+    assert ks == [0, 1, 2, 3]
+    with pytest.raises(KeyError):
+        make_policy("nope")
+
+
+def test_affinity_hash_is_process_stable():
+    # pinned values: the placement must reproduce across interpreters
+    # (Python's own str hash is salted, so the policy must not use it)
+    assert stable_hash("tenant-a") == 0xC2EF8128E3EB9EFB
+    assert stable_hash(42) == stable_hash("42")
+
+
+# ---------------------------------------------------------------------------
+# fleet runtime: orchestration, determinism, equivalence, scaling
+# ---------------------------------------------------------------------------
+def test_single_device_fleet_tick_identical_to_async_runtime():
+    """Acceptance contract: a 1-device UART fleet reproduces a plain
+    async FaseRuntime tick for tick, byte for byte."""
+    fr = FleetRuntime(n_devices=1, make_target=lambda: PySim(2, 1 << 22),
+                      link="uart")
+    fr.submit(Job("hello"))
+    fleet_rep = fr.run()
+    jr = fleet_rep.jobs[0].report
+
+    rt = FaseRuntime(PySim(2, 1 << 22), mode="fase", link="uart",
+                     session="async")
+    rt.load(build("hello"), ["hello"])
+    plain = rt.run(max_ticks=1 << 40)
+    assert (jr.ticks, jr.traffic_total, jr.stall, jr.traffic) == \
+        (plain.ticks, plain.traffic_total, plain.stall, plain.traffic)
+    assert jr.stdout == plain.stdout
+    assert fleet_rep.makespan_ticks == plain.ticks
+
+
+def test_fleet_determinism_across_runs():
+    g = graphgen.rmat(4, 8, weights=True)
+
+    def once():
+        fr = FleetRuntime(n_devices=2,
+                          make_target=lambda: PySim(1, 1 << 23),
+                          link="pcie", placement="least_loaded")
+        fr.submit(Job("bc", ["g.bin", "1", "1"], files={"g.bin": g}))
+        fr.submit(Job("hello"), replicas=2)
+        rep = fr.run()
+        return ([(r.job.job_id, r.device_id, r.report.ticks)
+                 for r in rep.jobs],
+                rep.makespan_ticks, rep.total_bytes,
+                {k: v["busy_ticks"] for k, v in rep.devices.items()})
+    assert once() == once()
+
+
+def test_fleet_scaling_and_report_aggregation():
+    fr1 = FleetRuntime(n_devices=1, make_target=lambda: PySim(1, 1 << 22),
+                       link="pcie")
+    fr1.submit(Job("hello"), replicas=4)
+    r1 = fr1.run()
+    fr4 = FleetRuntime(n_devices=4, make_target=lambda: PySim(1, 1 << 22),
+                       link="pcie")
+    fr4.submit(Job("hello"), replicas=4)
+    r4 = fr4.run()
+    # identical independent jobs: round-robin levels the fleet exactly
+    assert r4.makespan_ticks * 4 == r1.makespan_ticks
+    assert r4.jobs_per_second > 3.5 * r1.jobs_per_second
+    assert r4.balance == 1.0
+    assert r1.total_job_ticks == r4.total_job_ticks
+    assert r4.total_bytes == r1.total_bytes
+    assert [r.device_id for r in r4.jobs] == [0, 1, 2, 3]
+    # device stats survive the per-job queue-pair re-provisioning
+    assert all(d["jobs"] == 1 for d in r4.devices.values())
+
+
+def test_unknown_device_stream_key_raises():
+    router = FleetRouter(_mk_devices(2))
+    with pytest.raises(KeyError):
+        router.submit(HtpTransaction().reg_read(0, 1), 0, stream=(5, 0))
+
+
+def test_warm_fleet_reports_per_run_totals():
+    """Repeat submit/run cycles: each report covers its own batch (no
+    double-counted bytes, no throughput diluted by earlier runs)."""
+    fr = FleetRuntime(n_devices=2, make_target=lambda: PySim(1, 1 << 22),
+                      link="pcie")
+    fr.submit(Job("hello"), replicas=2)
+    r1 = fr.run()
+    fr.submit(Job("hello"), replicas=2)
+    r2 = fr.run()
+    assert r2.total_bytes == r1.total_bytes
+    assert r2.makespan_ticks == r1.makespan_ticks
+    assert r2.jobs_per_second == r1.jobs_per_second
+    assert r2.balance == r1.balance == 1.0
+    # the devices dict still shows the boards' cumulative lifetime state
+    assert all(d["jobs"] == 2 for d in r2.devices.values())
+    # skewed clocks: a batch after an unbalanced one reports only its
+    # own span, not earlier batches' occupancy on the busy board
+    fr.devices[0].stats.busy_ticks += 10 * r1.makespan_ticks
+    fr.submit(Job("hello"), replicas=2)
+    r3 = fr.run()
+    assert r3.makespan_ticks == r1.makespan_ticks
+    assert r3.jobs_per_second == r1.jobs_per_second
+
+
+def test_router_stats_on_finished_fleet_without_provisioning():
+    """Read-only fleet accessors must report retired queue pairs'
+    traffic and never re-image a device as a side effect."""
+    fr = FleetRuntime(n_devices=2, make_target=lambda: PySim(1, 1 << 22),
+                      link="pcie")
+    fr.submit(Job("hello"), replicas=2)
+    fleet_rep = fr.run()
+    router = fr.router()
+    st = router.stats()
+    assert st["total_bytes"] == fleet_rep.total_bytes > 0
+    assert all(v["transactions"] > 0 for v in st["per_device"].values())
+    assert router.tail_tokens() == ()
+    assert router.quiesce_tick() == 0
+    assert not any(d.provisioned for d in fr.devices)   # no side effects
+
+
+def test_mixed_link_fleet():
+    fr = FleetRuntime(n_devices=2, make_target=lambda: PySim(1, 1 << 22),
+                      links=["uart", "pcie"])
+    fr.submit(Job("hello"), replicas=2)
+    rep = fr.run()
+    by_dev = {r.device_id: r.report for r in rep.jobs}
+    assert by_dev[0].ticks > by_dev[1].ticks      # uart board is slower
+    assert rep.makespan_ticks == by_dev[0].ticks
+
+
+# ---------------------------------------------------------------------------
+# serving across the fleet
+# ---------------------------------------------------------------------------
+def test_serving_command_batches_shard_across_devices():
+    from repro.serving.htp import CommandBatch
+    router = FleetRouter(_mk_devices(2))
+    single = AsyncHtpSession(None, PcieChannel())
+    cb = CommandBatch.empty(slots=4, pages=8)
+    cb.override[:] = 7
+    cb.page_zeros = [3, 5]
+    # shard slots 0,2 -> dev0 and 1,3 -> dev1 the way ServeEngine does
+    for k in range(2):
+        slots = [k, k + 2]
+        sub = CommandBatch(override=cb.override[slots], eos=cb.eos[slots],
+                           max_lens=cb.max_lens[slots],
+                           block_tables=cb.block_tables[slots],
+                           page_zeros=list(cb.page_zeros[k::2]))
+        router.submit(sub.to_transaction(), 0, stream=(k, "serve"))
+    single.submit(cb.to_transaction(), 0, stream="serve")
+    st = router.stats()
+    # byte totals and categories are preserved under sharding
+    assert st["total_bytes"] == single.channel.total_bytes
+    assert st["bytes_by_cat"] == dict(single.channel.bytes_by_cat)
+    assert st["per_device"][0]["wire_bytes"] == \
+        st["per_device"][1]["wire_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: speculative syscall-arg prefetch
+# ---------------------------------------------------------------------------
+def test_arg_prefetch_functionally_identical_and_fewer_round_trips():
+    reps = {}
+    txns = {}
+    for pf in (False, True):
+        rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="pcie",
+                         arg_prefetch=pf)
+        rt.load(build("hello"), ["hello"])
+        reps[pf] = rt.run(max_ticks=1 << 34)
+        txns[pf] = rt.session.stats.transactions
+    assert reps[True].stdout == reps[False].stdout
+    assert reps[True].exit_code == reps[False].exit_code
+    assert txns[True] < txns[False]                  # fewer round trips
+    assert reps[True].traffic_total > reps[False].traffic_total  # more bytes
+    # the prefetched registers are billed to their own traffic category
+    assert reps[True].traffic["sys:argprefetch"] > 0
+
+
+def test_arg_prefetch_default_off_keeps_uart_goldens():
+    rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="uart")
+    assert rt.arg_prefetch is False
+    rt.load(build("hello"), ["hello"])
+    rep = rt.run(max_ticks=1 << 34)
+    assert "sys:argprefetch" not in rep.traffic
+
+
+# ---------------------------------------------------------------------------
+# satellite: sync-session per-hart ctrl_free backport
+# ---------------------------------------------------------------------------
+def test_ctrl_serialize_prevents_cross_transaction_overlap():
+    """The overlap artefact: without the flag, a second transaction's
+    controller cycles can start while the first's 1.5k-cycle PageS tail
+    is still executing on the same hart.  With the flag, the hart's
+    controller slice serialises them (the async engine's discipline)."""
+    def run(flag):
+        sess = HtpSession(PySim(1, 1 << 20), PcieChannel(),
+                          ctrl_serialize=flag)
+        r1 = sess.submit(HtpTransaction().page_set(0, 3, 0, "pf"), 0)
+        r2 = sess.submit(HtpTransaction().reg_read(0, 1), 0)
+        return r1, r2
+    r1, r2 = run(False)
+    assert r2.done < r1.done          # the unphysical overlap
+    r1s, r2s = run(True)
+    assert r2s.done >= r1s.done + 1   # serialised behind the PageS tail
+    assert r1s.done == r1.done        # first transaction unchanged
+
+
+def test_ctrl_serialize_default_off_is_tick_identical():
+    """Flag off (the default) must keep the historical arithmetic —
+    that is the UART golden-tick contract."""
+    def trace(sess):
+        out, at = [], 0
+        for cpu in (0, 1):
+            r = sess.submit(_ctx_save(cpu), at)
+            out.append((tuple(r.ticks), r.done))
+            at = r.done
+        return out, sess.stats.uart_ticks
+    base = trace(HtpSession(PySim(2, 1 << 20), UartChannel()))
+    dflt = trace(HtpSession(PySim(2, 1 << 20), UartChannel(),
+                            ctrl_serialize=False))
+    assert base == dflt
+
+
+def test_ctrl_serialize_runtime_end_to_end():
+    """Runtime wiring: the flag reaches the session and the run still
+    completes correctly on both engines."""
+    for engine in ("sync", "async"):
+        rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="pcie",
+                         session=engine, ctrl_serialize=True)
+        assert rt.session.ctrl_serialize is True
+        rt.load(build("hello"), ["hello"])
+        rep = rt.run(max_ticks=1 << 34)
+        assert b"hello from FASE target" in rep.stdout

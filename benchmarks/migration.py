@@ -1,0 +1,247 @@
+"""Snapshot/migration economics across the fleet.
+
+Four panels, one JSON artifact (``results/migration.json``):
+
+  * ``migration``   — live job migration cost per link: a GAPBS job is
+    paused mid-run, checkpointed over its source link, restored over the
+    destination link and run to completion.  Reports billed wire bytes
+    on both links, pages shipped, modelled downtime, and the full-vs-
+    pre-copy-delta comparison (the delta ships only PageH-dirty pages).
+    Output equivalence with the unmigrated run is asserted.
+  * ``provisioning`` — billed device re-imaging (``provision_us``) on a
+    skewed two-image job mix: the provision-aware ``least_loaded``
+    policy (which folds the flash charge it would trigger into its clock
+    comparison) against the provision-blind greedy and round-robin.
+  * ``serving``      — load-aware serving slot migration on a skewed
+    fleet (one board behind a far/oversubscribed PCIe hop): sticky
+    slot%N sharding vs the ``least_loaded`` slot-migration policy,
+    which moves decode slots off the slow board and pays block-table +
+    KV re-shipment on both links.  Token outputs must be identical.
+  * ``identity``     — the degenerate contract: a 1-device UART fleet
+    with the snapshot subsystem loaded is still tick-identical to a
+    plain async FaseRuntime.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import save_json
+from repro.configs import CONFIGS
+from repro.configs.fase_rocket import FASE_FLEET_PROVISION
+from repro.core.fleet import FleetRuntime, Job
+from repro.core.runtime import FaseRuntime
+from repro.core.target.cpu import CLOCK_HZ
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+from repro.models import core as M
+from repro.serving.engine import Request, ServeEngine
+
+N_CORES = 1
+MEM = 1 << 23
+
+
+def _fleet(links, placement="round_robin", provision_us=0.0):
+    return FleetRuntime(make_target=lambda: PySim(N_CORES, MEM),
+                        n_devices=len(links), links=list(links),
+                        placement=placement, provision_us=provision_us)
+
+
+def _algo_output(report) -> bytes:
+    """Stdout minus timing-visible lines: ``trial_ns`` comes from
+    clock_gettime, i.e. modelled target time — a migrated run
+    legitimately prints different timings, but the algorithmic output
+    (scores, checksums) must be bit-identical."""
+    return b"\n".join(ln for ln in report.stdout.splitlines()
+                      if not ln.startswith(b"trial_ns"))
+
+
+def _pause_at_instret(fr, handle, target_instret: int):
+    """Advance a running job in slices until its retired-instruction
+    count reaches ``target_instret`` — pause points track the compute
+    phase regardless of how much of the modelled timeline the link's
+    stalls occupy.  Each slice is bounded by the instructions still
+    missing (one instruction needs at least one tick), so a slice can
+    never overshoot the milestone, however bursty the compute phase."""
+    rt = handle.runtime
+    while True:
+        cur = rt.target.get_instret(0)
+        if cur >= target_instret:
+            return
+        paused = fr.step_job(
+            handle,
+            pause_ticks=rt.target.get_ticks() + (target_instret - cur))
+        assert paused is None, "job finished before the pause point"
+
+
+def migration_panel(quick: bool) -> list:
+    g = graphgen.rmat(4 if quick else 5, 8, weights=True)
+    # enough trials that the pre-copy's wire time can drain between the
+    # base checkpoint and the stop-and-copy point (on the fast link; a
+    # UART pre-copy is ~10x this job and stays queued — reported as
+    # precopy_queued)
+    trials = "4" if quick else "48"
+    job_args = (["g.bin", "1", trials], {"g.bin": g})
+    rows = []
+    for link in ("uart", "pcie"):
+        base = _fleet([link])
+        b = base.run_job(base.devices[0],
+                         Job("bc", job_args[0], files=dict(job_args[1])))
+        # pause milestones inside the compute phase, by instructions
+        # retired (most of the modelled timeline is load / fault-storm
+        # stall, where nothing dirties memory)
+        n_inst = b.report.instret[0]
+        i_pre, i_mig = int(n_inst * 0.35), int(n_inst * 0.7)
+
+        # full migration at the i_mig milestone
+        fr = _fleet([link, link])
+        h = fr.start_job(Job("bc", job_args[0], files=dict(job_args[1])),
+                         fr.devices[0])
+        _pause_at_instret(fr, h, i_mig)
+        mig = fr.migrate(h, fr.devices[1])
+        res = fr.finish_job(h)
+
+        # pre-copy: base checkpoint ships early, downtime pays the delta
+        fr2 = _fleet([link, link])
+        h2 = fr2.start_job(Job("bc", job_args[0],
+                               files=dict(job_args[1])), fr2.devices[0])
+        _pause_at_instret(fr2, h2, i_pre)
+        basesnap = fr2.prepare_migration(h2, fr2.devices[1])
+        _pause_at_instret(fr2, h2, i_mig)
+        mig_d = fr2.migrate(h2, fr2.devices[1], base=basesnap)
+        res_d = fr2.finish_job(h2)
+
+        ok = (_algo_output(res.report) == _algo_output(b.report) ==
+              _algo_output(res_d.report))
+        rows.append(dict(
+            link=link, baseline_ticks=b.report.ticks,
+            migrated_ticks=res.report.ticks,
+            overhead_ticks=res.report.ticks - b.report.ticks,
+            full=dict(pages=mig.pages_shipped, src_bytes=mig.src_bytes,
+                      dst_bytes=mig.dst_bytes,
+                      downtime_ticks=mig.downtime_ticks),
+            delta=dict(pages=mig_d.pages_shipped,
+                       pages_total=mig_d.pages_total,
+                       src_bytes=mig_d.src_bytes,
+                       dst_bytes=mig_d.dst_bytes,
+                       downtime_ticks=mig_d.downtime_ticks,
+                       # the base shipment's wire time had not drained
+                       # off the links when the job paused (pre-copy
+                       # window larger than the remaining run), so the
+                       # measured downtime still queues behind it
+                       precopy_queued=(mig_d.downtime_ticks >=
+                                       mig.downtime_ticks)),
+            output_identical=ok))
+        print(f"migration,bc@{link},{mig.downtime_ticks},"
+              f"full {mig.src_bytes}+{mig.dst_bytes}B "
+              f"delta {mig_d.src_bytes}+{mig_d.dst_bytes}B "
+              f"({mig_d.pages_shipped}/{mig_d.pages_total} pages) "
+              f"delta_downtime {mig_d.downtime_ticks} ok={ok}",
+              flush=True)
+    return rows
+
+
+def provisioning_panel(quick: bool) -> list:
+    """Skewed two-image mix under billed provisioning: the aware greedy
+    keeps same-image jobs on warm boards; the blind one re-flashes."""
+    g = graphgen.rmat(4 if quick else 5, 8, weights=True)
+    prov_us = FASE_FLEET_PROVISION["provision_us"]
+    reps = 3 if quick else 4
+    rows = []
+    for policy in ("round_robin", "least_loaded_blind", "least_loaded"):
+        fr = _fleet(["pcie", "pcie"], placement=policy,
+                    provision_us=prov_us)
+        for _ in range(reps):
+            # skewed 1:2 image mix: a clock-only greedy keeps flipping
+            # each board between images (a flash per flip); the aware
+            # greedy parks the big image on one warm board when the
+            # flash charge outweighs the queue gap
+            fr.submit(Job("bc", ["g.bin", "1", "1"],
+                          files={"g.bin": g}))
+            fr.submit(Job("hello"), replicas=2)
+        rep = fr.run()
+        provisions = sum(d.stats.provisions for d in fr.devices)
+        prov_ticks = sum(d.stats.provision_ticks for d in fr.devices)
+        rows.append(dict(
+            policy=policy, provision_us=prov_us,
+            makespan_ticks=rep.makespan_ticks, provisions=provisions,
+            provision_ticks=prov_ticks, balance=rep.balance,
+            assignment=[(r.job.job_id, r.device_id) for r in rep.jobs]))
+        print(f"provisioning,{policy},{rep.makespan_ticks},"
+              f"{provisions} flashes / {prov_ticks} ticks", flush=True)
+    return rows
+
+
+def serving_panel(quick: bool) -> list:
+    cfg = CONFIGS["qwen3-8b"].smoke()
+    params = M.init_params(cfg, 0)
+    n_req = 8 if quick else 16
+    max_new = 24
+    outs = {}
+    rows = []
+    for policy in ("sticky", "least_loaded"):
+        fr = _fleet(["pcie", "pcie_far"])
+        # rebalance early: slots are cheapest to move while their KV
+        # residency is still a page or two
+        eng = ServeEngine(cfg, params, slots=8, max_seq=128,
+                          poll_every=4, fleet=fr, slot_policy=policy,
+                          rebalance_every=2)
+        for i in range(n_req):
+            eng.submit(Request(rid=i, prompt=[3 + i % 5, 7, 11, 2],
+                               max_new=max_new, eos=1))
+        done = eng.run()
+        outs[policy] = sorted((r.rid, tuple(r.out)) for r in done)
+        mean_span = sum(eng.step_spans) / max(len(eng.step_spans), 1)
+        rows.append(dict(
+            policy=policy, links=["pcie", "pcie_far"], slots=8,
+            requests=n_req, steps=eng.steps,
+            makespan_ticks=eng.link_tick, mean_step_span=mean_span,
+            slot_migrations=eng.slot_migrations,
+            migrate_bytes=eng.traffic.by_cat.get("slot_migrate", 0)))
+        print(f"serving_migration,{policy},{eng.link_tick},"
+              f"mean step {mean_span:.0f} ticks, "
+              f"{eng.slot_migrations} moves", flush=True)
+    assert outs["sticky"] == outs["least_loaded"], \
+        "slot migration changed tokens"
+    return rows
+
+
+def identity_panel() -> dict:
+    fr = _fleet(["uart"])
+    fleet_rep = fr.run_job(fr.devices[0], Job("hello")).report
+    rt = FaseRuntime(PySim(N_CORES, MEM), mode="fase", link="uart",
+                     session="async")
+    rt.load(build("hello"), ["hello"])
+    plain = rt.run(max_ticks=1 << 40)
+    identical = (fleet_rep.ticks == plain.ticks and
+                 fleet_rep.traffic_total == plain.traffic_total and
+                 fleet_rep.stdout == plain.stdout)
+    print(f"migration_identity,hello,{int(identical)},"
+          f"fleet={fleet_rep.ticks} plain={plain.ticks}", flush=True)
+    return dict(workload="hello", identical=identical,
+                fleet_ticks=fleet_rep.ticks, plain_ticks=plain.ticks)
+
+
+def run(quick: bool = False):
+    mig = migration_panel(quick)
+    prov = provisioning_panel(quick)
+    serv = serving_panel(quick)
+    ident = identity_panel()
+    out = dict(quick=quick, clock_hz=CLOCK_HZ, migration=mig,
+               provisioning=prov, serving=serv, uart_identical=ident)
+    save_json("migration.json", out)
+    aware = next(r for r in prov if r["policy"] == "least_loaded")
+    blind = next(r for r in prov if r["policy"] == "least_loaded_blind")
+    print(f"migration,summary,{mig[-1]['full']['downtime_ticks']},"
+          f"pcie downtime ticks; provision-aware vs blind makespan "
+          f"{aware['makespan_ticks']}/{blind['makespan_ticks']}; "
+          f"serving {serv[1]['makespan_ticks']}/"
+          f"{serv[0]['makespan_ticks']} "
+          f"(uart_identical={ident['identical']})", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -11,8 +11,9 @@ import time
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from . import (baud_sweep, coremark_accuracy, gapbs_accuracy,
-                   hfutex_bench, htp_vs_direct, roofline, scale_sweep,
+    from . import (arg_prefetch, baud_sweep, coremark_accuracy,
+                   fleet_scale, gapbs_accuracy, hfutex_bench,
+                   htp_vs_direct, migration, roofline, scale_sweep,
                    serving_traffic, speedup, stall_breakdown)
     modules = [
         ("htp_vs_direct", htp_vs_direct),
@@ -24,6 +25,9 @@ def main() -> None:
         ("hfutex", hfutex_bench),
         ("scale_sweep", scale_sweep),
         ("serving_traffic", serving_traffic),
+        ("arg_prefetch", arg_prefetch),
+        ("fleet_scale", fleet_scale),
+        ("migration", migration),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

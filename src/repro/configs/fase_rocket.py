@@ -7,8 +7,8 @@ session knobs) and ``fleet_kwargs`` down to
 per-device link mix), so benchmarks can instantiate either straight
 from a registry entry.
 """
-from .registry import (FASE_FLEET, FASE_ROCKET,           # noqa: F401
-                       FASE_ROCKET_PCIE)
+from .registry import (FASE_FLEET, FASE_FLEET_PROVISION,  # noqa: F401
+                       FASE_ROCKET, FASE_ROCKET_PCIE)
 
 CONFIG = FASE_ROCKET
 
@@ -23,7 +23,7 @@ def runtime_kwargs(cfg: dict = FASE_ROCKET) -> dict:
     return out
 
 
-_FLEET_KEYS = ("n_devices", "placement")
+_FLEET_KEYS = ("n_devices", "placement", "provision_us")
 _FLEET_RENAMED = {"device_links": "links"}
 
 

@@ -81,11 +81,23 @@ FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie", "qp_depth": 16,
 # a fleet of the PCIe target: N modelled FPGAs, each with its own link and
 # queue pair, behind the repro.core.fleet routing/orchestration layer.
 # ``n_devices`` sizes the fleet, ``placement`` picks the job placement
-# policy ("round_robin" | "least_loaded" | "affinity"), and
-# ``device_links`` (one link name per device) models a mixed-link farm —
-# None keeps every board on the config's ``link``.
+# policy ("round_robin" | "least_loaded" | "least_loaded_blind" |
+# "affinity"), ``device_links`` (one link name per device) models a
+# mixed-link farm — None keeps every board on the config's ``link`` —
+# and ``provision_us`` is the FireSim-style re-imaging cost charged
+# whenever a board's resident image changes (0 = historical free
+# provisioning).
 FASE_FLEET = {**FASE_ROCKET_PCIE, "n_devices": 4,
-              "placement": "round_robin", "device_links": None}
+              "placement": "round_robin", "device_links": None,
+              "provision_us": 0.0}
+
+# provisioning-aware fleet: bitstream flash + ELF load cost several ms of
+# modelled time per re-image, and the provision-aware least_loaded policy
+# trades that charge off against queue depth (benchmarks/migration.py
+# measures it against the provision-blind greedy).
+FASE_FLEET_PROVISION = {**FASE_FLEET, "n_devices": 2,
+                        "placement": "least_loaded",
+                        "provision_us": 5_000.0}
 
 
 def get(name: str) -> ModelConfig:

@@ -145,6 +145,20 @@ class PcieChannel(Channel):
         return int(round(self.latency_us * self.clock_hz / 1e6))
 
 
+class FarPcieChannel(PcieChannel):
+    """A board behind an oversubscribed switch / cable extender hop: the
+    same DMA engine as :class:`PcieChannel` but a fraction of the payload
+    bandwidth and tens of microseconds of added per-transaction setup.
+    This is the *skewed fleet* case the load-aware serving slot-migration
+    policy exists for (and what migrating a job off such a board wins)."""
+
+    name = "pcie_far"
+
+    def __init__(self, gbits_per_s: float = 2.0, latency_us: float = 50.0,
+                 clock_hz: int = CLOCK_HZ, enabled: bool = True):
+        super().__init__(gbits_per_s, latency_us, clock_hz, enabled)
+
+
 class OracleChannel(Channel):
     """Zero-time link: traffic is accounted, occupancy never modelled."""
 
@@ -158,7 +172,7 @@ class OracleChannel(Channel):
 
 
 CHANNELS = {"uart": UartChannel, "pcie": PcieChannel,
-            "oracle": OracleChannel}
+            "pcie_far": FarPcieChannel, "oracle": OracleChannel}
 
 
 def make_channel(name: str, baud: int = 921600,

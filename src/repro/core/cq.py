@@ -59,6 +59,14 @@ from .session import (HtpSession, HtpTransaction, TransactionResult)
 #: counters in :class:`CqStats` keep the full totals)
 CQ_CAPACITY = 4096
 
+#: submission-stream key for snapshot/restore traffic
+#: (:mod:`repro.core.snapshot`).  Checkpoints are whole-target operations,
+#: not per-hart work, so they ride their own named stream — like the
+#: serving engine's ``"serve"`` — and barrier on every per-hart stream's
+#: tail token (``tail_tokens()``) before capturing, so an in-flight fault
+#: batch is never snapshotted half-applied.
+SNAPSHOT_STREAM = "snap"
+
 
 @dataclass(frozen=True)
 class CompletionToken:

@@ -32,10 +32,23 @@ except explicit dependency tokens (a token's ``tick`` is modelled time,
 which every device shares as a unit), so aggregate throughput on
 independent workloads scales with device count — the
 ``benchmarks/fleet_scale.py`` claim.
+
+Device lifecycle is billed: ``Device.provision()`` charges a FireSim-
+style re-imaging cost whenever the board's resident image changes
+(``provision_us``; the provision-aware ``least_loaded`` policy trades
+that charge off against queue depth), and
+:meth:`~repro.core.fleet.runtime.FleetRuntime.migrate` live-migrates a
+paused job between boards by shipping an HTP-captured checkpoint
+(:mod:`repro.core.snapshot`) over both devices' links — wire bytes,
+provision latency and downtime all land in the
+:class:`~repro.core.fleet.runtime.MigrationReport`
+(``benchmarks/migration.py``).
 """
 from .device import Device, DeviceStats                     # noqa: F401
 from .placement import (POLICIES, AffinityPolicy,           # noqa: F401
-                        LeastLoadedPolicy, PlacementPolicy,
-                        RoundRobinPolicy, make_policy)
+                        LeastLoadedBlindPolicy, LeastLoadedPolicy,
+                        PlacementPolicy, RoundRobinPolicy, image_key_of,
+                        make_policy)
 from .router import FleetRouter                             # noqa: F401
-from .runtime import FleetReport, FleetRuntime, Job         # noqa: F401
+from .runtime import (FleetReport, FleetRuntime, Job,       # noqa: F401
+                      JobResult, MigrationReport, RunningJob)

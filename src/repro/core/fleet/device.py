@@ -18,6 +18,12 @@ from ..channel import make_channel
 from ..cq import AsyncHtpSession
 from ..hfutex import HFutexCache
 from ..session import HtpSession
+from ..target.cpu import CLOCK_HZ
+
+#: image identity of a device provisioned without an explicit image key
+#: (lazy ``.session`` access); distinct from every job image, so the
+#: first keyed provision afterwards still re-flashes.
+DEFAULT_IMAGE = "<default>"
 
 
 @dataclass
@@ -29,6 +35,8 @@ class DeviceStats:
     transactions: int = 0
     wire_bytes: int = 0
     exceptions: int = 0
+    provisions: int = 0          # billed re-imagings (bitstream + ELF)
+    provision_ticks: int = 0     # total ticks spent re-imaging
     bytes_by_cat: dict = field(default_factory=dict)
 
     def absorb_session(self, session) -> None:
@@ -51,7 +59,7 @@ class Device:
                  baud: int = 921600, session: str = "async",
                  queue_depth: int = 8, coalesce_ticks: int = 50,
                  hfutex: bool = True, direct_mode: bool = False,
-                 label: str | None = None):
+                 provision_us: float = 0.0, label: str | None = None):
         assert session in ("async", "sync")
         self.id = device_id
         self.make_target = make_target
@@ -62,21 +70,48 @@ class Device:
         self.coalesce_ticks = coalesce_ticks
         self.hfutex = hfutex
         self.direct_mode = direct_mode
+        # FireSim-style re-imaging cost: bitstream flash + ELF load is
+        # wall-clock seconds on real boards.  Charged on every provision
+        # that changes the board's resident image (a same-image
+        # re-provision is a warm reuse and stays free); 0 keeps the
+        # historical free-provisioning behaviour and all golden ticks.
+        self.provision_us = provision_us
+        self.image_key: object = None     # image resident on the board
         self.label = label or f"dev{device_id}@{link}"
         self.stats = DeviceStats()
         self._session: HtpSession | None = None
 
     # -- queue pair -----------------------------------------------------
-    def provision(self) -> HtpSession:
+    def provision_ticks_for(self, image_key=None) -> int:
+        """Re-imaging charge provisioning with ``image_key`` would incur
+        right now (0 when the image is already resident, or when
+        provisioning is modelled free).  The provision-aware
+        ``least_loaded`` policy folds this into its clock comparison."""
+        key = image_key if image_key is not None else DEFAULT_IMAGE
+        if self.provision_us <= 0 or key == self.image_key:
+            return 0
+        return int(round(self.provision_us * CLOCK_HZ / 1e6))
+
+    def provision(self, image_key=None) -> HtpSession:
         """(Re)image the device: fresh target, channel and queue pair.
         A live queue pair being replaced folds into the device stats
-        first, so no traffic is ever dropped.
+        first, so no traffic is ever dropped.  When the requested image
+        differs from the board's resident one (and ``provision_us`` is
+        set) the re-imaging cost is charged to the device's serial
+        occupancy clock.
 
         The construction mirrors :class:`~repro.core.runtime.FaseRuntime`
         exactly, which is what keeps a one-device fleet tick-identical to
         a plain runtime (``tests/test_fleet.py`` pins this down)."""
         if self._session is not None:
             self.stats.absorb_session(self._session)
+        cost = self.provision_ticks_for(image_key)
+        if cost:
+            self.stats.provisions += 1
+            self.stats.provision_ticks += cost
+            self.stats.busy_ticks += cost
+        self.image_key = image_key if image_key is not None \
+            else DEFAULT_IMAGE
         target = self.make_target()
         ch = make_channel(self.link, baud=self.baud)
         hf = HFutexCache(target.n_cores, enabled=self.hfutex)
@@ -116,24 +151,35 @@ class Device:
         return self.stats.busy_ticks
 
     # -- job execution --------------------------------------------------
-    def make_runtime(self, **runtime_kwargs):
+    def make_runtime(self, image_key=None, **runtime_kwargs):
         """A fresh :class:`~repro.core.runtime.FaseRuntime` over a fresh
         queue pair (the previous pair's counters are folded into the
         device stats first)."""
         from ..runtime import FaseRuntime   # runtime layer sits above us
-        sess = self.provision()
+        sess = self.provision(image_key)
         return FaseRuntime(sess.t, mode="fase", session_obj=sess,
                            **runtime_kwargs)
 
-    def retire(self, report) -> None:
+    def retire(self, report, span: int | None = None) -> None:
         """Account one finished job: the device stays busy for its whole
         modelled makespan (serial occupancy — one job at a time per
         board), and the job's queue-pair counters fold into the device
         stats (and only here — ``provision`` absorbs a pair it replaces,
-        so nothing is counted twice)."""
+        so nothing is counted twice).  A migrated-in job passes ``span``
+        — only the ticks it actually spent on THIS board (its earlier
+        span was charged to the source at migration time)."""
         self.stats.jobs += 1
-        self.stats.busy_ticks += report.ticks
+        self.stats.busy_ticks += report.ticks if span is None else span
         self.stats.exceptions += report.sched.get("exceptions", 0)
+        if self._session is not None:
+            self.stats.absorb_session(self._session)
+            self._session = None
+
+    def evict(self) -> None:
+        """The running job migrated away mid-run: fold the live queue
+        pair's counters and drop it.  No job completion is counted and
+        the board keeps its resident image (a later same-image job
+        re-provisions free)."""
         if self._session is not None:
             self.stats.absorb_session(self._session)
             self._session = None

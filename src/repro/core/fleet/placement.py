@@ -9,8 +9,14 @@ form (never Python's salted ``hash``).
   * ``round_robin``  — cycles the fleet in submission order; ideal for
     homogeneous replicated jobs.
   * ``least_loaded`` — online greedy: place on the device with the
-    smallest serial-occupancy clock (ties break on fleet order).  Beats
-    round-robin when job durations are skewed.
+    smallest serial-occupancy clock *plus the re-imaging charge this
+    job would trigger there* (ties break on fleet order).  Beats
+    round-robin when job durations are skewed, and — with billed
+    provisioning — keeps same-image jobs on warm boards whenever the
+    flash cost outweighs the queue-depth gap.
+  * ``least_loaded_blind`` — the same greedy without the provisioning
+    term (the historical behaviour; the baseline ``benchmarks/
+    migration.py`` measures the provision-aware policy against).
   * ``affinity``     — sticky: the same ``affinity_key`` always lands on
     the same device (page-cache / re-image locality across a fleet);
     keyless jobs fall back to round-robin.
@@ -20,6 +26,22 @@ from __future__ import annotations
 from abc import ABC, abstractmethod
 
 FNV_OFFSET, FNV_PRIME = 0xCBF29CE484222325, 0x100000001B3
+
+
+def image_key_of(job) -> object:
+    """The re-imaging identity of a job: which bitstream+ELF the owning
+    board must carry.  Named workloads share their name (two ``"bc"``
+    jobs re-use a flash); an explicit pre-assembled image is keyed by
+    the image object itself — identity comparison, and the board's
+    resident-image reference keeps it alive, so the key can never alias
+    a recycled address the way ``id()`` would.  Only ever compared for
+    equality — placement outcomes stay process-stable."""
+    if job is None:
+        return None
+    img = getattr(job, "image", None)
+    if img is not None:
+        return img
+    return getattr(job, "name", None)
 
 
 def stable_hash(key) -> int:
@@ -59,8 +81,33 @@ class RoundRobinPolicy(PlacementPolicy):
 class LeastLoadedPolicy(PlacementPolicy):
     name = "least_loaded"
 
+    def __init__(self, provision_aware: bool = True):
+        self.provision_aware = provision_aware
+
     def place(self, job, devices):
-        return min(enumerate(devices), key=lambda e: (e[1].clock, e[0]))[1]
+        key = image_key_of(job) if self.provision_aware else None
+
+        def cost(e):
+            i, d = e
+            c = d.clock
+            if self.provision_aware:
+                # the re-imaging charge this job would trigger here (0
+                # on device-likes that don't model provisioning)
+                fn = getattr(d, "provision_ticks_for", None)
+                if fn is not None:
+                    c += fn(key)
+            return (c, i)
+        return min(enumerate(devices), key=cost)[1]
+
+
+class LeastLoadedBlindPolicy(LeastLoadedPolicy):
+    """``least_loaded`` without the provisioning term: balances raw
+    clocks only, re-flashing boards the aware policy would keep warm."""
+
+    name = "least_loaded_blind"
+
+    def __init__(self):
+        super().__init__(provision_aware=False)
 
 
 class AffinityPolicy(PlacementPolicy):
@@ -80,7 +127,8 @@ class AffinityPolicy(PlacementPolicy):
 
 
 POLICIES = {p.name: p for p in
-            (RoundRobinPolicy, LeastLoadedPolicy, AffinityPolicy)}
+            (RoundRobinPolicy, LeastLoadedPolicy, LeastLoadedBlindPolicy,
+             AffinityPolicy)}
 
 
 def make_policy(name) -> PlacementPolicy:

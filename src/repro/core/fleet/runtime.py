@@ -18,10 +18,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .. import snapshot as snapmod
 from ..target.cpu import CLOCK_HZ
 from ..workloads import build
 from .device import Device
-from .placement import make_policy
+from .placement import image_key_of, make_policy
 from .router import FleetRouter
 
 
@@ -46,6 +47,46 @@ class JobResult:
     start_tick: int               # owning device's clock at placement
     done_tick: int                # … after the job retired
     report: object                # the job's full FaseRuntime Report
+
+
+@dataclass
+class RunningJob:
+    """Handle to a placed, loaded, not-yet-finished job — the unit the
+    pausable/migratable APIs (:meth:`FleetRuntime.step_job`,
+    :meth:`FleetRuntime.migrate`) operate on."""
+
+    job: Job
+    device: Device
+    runtime: object               # the job's FaseRuntime
+    image_key: object
+    #: job-relative tick up to which occupancy is already attributed
+    #: (to earlier boards, at migration time)
+    mark: int = 0
+    migrations: list = field(default_factory=list)
+
+
+@dataclass
+class MigrationReport:
+    """Cost sheet of one live job migration — every number is billed
+    modelled time / wire traffic, not bookkeeping."""
+
+    job_id: int
+    src: object                   # source device id
+    dst: object                   # destination device id
+    delta: bool                   # restore shipped only a dirty delta
+    pages_total: int              # pages in the checkpoint's full image
+    pages_shipped: int            # pages the destination restore shipped
+    src_bytes: int                # capture traffic on the source link
+    dst_bytes: int                # restore traffic on the destination
+    capture_start: int            # job-relative tick the capture began
+    capture_done: int
+    provision_ticks: int          # destination re-imaging charge
+    restore_done: int             # job-relative resume tick
+
+    @property
+    def downtime_ticks(self) -> int:
+        """Modelled ticks the job was frozen (capture through resume)."""
+        return self.restore_done - self.capture_start
 
 
 @dataclass
@@ -89,6 +130,7 @@ class FleetRuntime:
                  links: list | None = None, baud: int = 921600,
                  session: str = "async", queue_depth: int = 8,
                  coalesce_ticks: int = 50, hfutex: bool = True,
+                 provision_us: float = 0.0,
                  runtime_kwargs: dict | None = None):
         if devices is None:
             assert make_target is not None, \
@@ -98,7 +140,8 @@ class FleetRuntime:
             devices = [Device(i, make_target,
                               link=links[i] if links else link, baud=baud,
                               session=session, queue_depth=queue_depth,
-                              coalesce_ticks=coalesce_ticks, hfutex=hfutex)
+                              coalesce_ticks=coalesce_ticks, hfutex=hfutex,
+                              provision_us=provision_us)
                        for i in range(n_devices)]
         self.devices = devices
         self.policy = make_policy(placement)
@@ -122,16 +165,122 @@ class FleetRuntime:
         return out
 
     # -- orchestration ---------------------------------------------------
-    def run_job(self, device: Device, job: Job) -> JobResult:
-        """Run one job on one device (fresh queue pair, full runtime)."""
-        rt = device.make_runtime(**self.runtime_kwargs)
+    def start_job(self, job: Job, device: Device | None = None
+                  ) -> RunningJob:
+        """Place (or pin) and load one job without running it — the
+        entry point of the pausable/migratable execution path."""
+        dev = device if device is not None \
+            else self.policy.place(job, self.devices)
+        key = image_key_of(job)
+        rt = dev.make_runtime(image_key=key, **self.runtime_kwargs)
         image = job.image if job.image is not None else build(job.name)
         rt.load(image, [job.name] + list(job.argv), stdin=job.stdin,
                 files=job.files or {})
-        start = device.clock
-        rep = rt.run(max_ticks=job.max_ticks)
-        device.retire(rep)
-        return JobResult(job, device.id, start, device.clock, rep)
+        return RunningJob(job, dev, rt, key)
+
+    def step_job(self, handle: RunningJob, pause_ticks: int):
+        """Run a slice of the job; returns its final Report when it
+        finished inside the slice, else None (paused, migratable)."""
+        rep = handle.runtime.run_slice(pause_ticks,
+                                       max_ticks=handle.job.max_ticks)
+        if rep is not None:
+            self._retire(handle, rep)
+        return rep
+
+    def finish_job(self, handle: RunningJob) -> JobResult:
+        """Run the job to completion on its current device and retire."""
+        rep = handle.runtime.run(max_ticks=handle.job.max_ticks)
+        return self._retire(handle, rep)
+
+    def _retire(self, handle: RunningJob, rep) -> JobResult:
+        dev = handle.device
+        start = dev.clock
+        dev.retire(rep, span=rep.ticks - handle.mark)
+        return JobResult(handle.job, dev.id, start, dev.clock, rep)
+
+    def run_job(self, device: Device, job: Job) -> JobResult:
+        """Run one job on one device (fresh queue pair, full runtime)."""
+        return self.finish_job(self.start_job(job, device))
+
+    # -- checkpoint / migration ------------------------------------------
+    def checkpoint(self, handle: RunningJob,
+                   base: "snapmod.TargetSnapshot | None" = None):
+        """Checkpoint the (paused) job through its device's own queue
+        pair — the capture traffic serialises on the source link.  The
+        page set is the runtime's allocator view (every referenced
+        physical page, hardware page tables included), not a memory
+        scan.  Returns ``(snapshot, done_tick)``."""
+        rt = handle.runtime
+        return snapmod.capture(rt.session, at=rt.target.get_ticks(),
+                               pages=sorted(rt.alloc.refcnt), base=base)
+
+    def prepare_migration(self, handle: RunningJob, dst: Device):
+        """Pre-copy: provision ``dst`` and ship a full base checkpoint
+        onto it while the job keeps running on its source board.  The
+        later :meth:`migrate` then pays only the dirty delta.  Returns
+        the base snapshot to pass as ``migrate(..., base=)``."""
+        assert dst is not handle.device, "pre-copy needs a distinct board"
+        snap, t1 = self.checkpoint(handle)
+        sess = dst.provision(handle.image_key)
+        snapmod.restore(sess, snap, at=t1, category="migrate")
+        snap.resident_session = sess
+        return snap
+
+    def migrate(self, handle: RunningJob, dst: Device,
+                base: "snapmod.TargetSnapshot | None" = None
+                ) -> MigrationReport:
+        """Live-migrate a paused job: checkpoint on the source (billed
+        on its link), re-image the destination (billed ``provision_us``
+        when the board carries a different image), restore over the
+        destination link, re-point the job's host runtime at the new
+        queue pair and account the source span.  With ``base`` from
+        :meth:`prepare_migration` only the dirty delta crosses the
+        wires.  The job resumes via :meth:`step_job`/:meth:`finish_job`
+        as if nothing happened — host state never moved."""
+        src, rt = handle.device, handle.runtime
+        assert dst is not src, "migration needs a distinct destination"
+        t0 = rt.target.get_ticks()
+        src_b0 = rt.session.channel.total_bytes
+        snap, t1 = self.checkpoint(handle, base=base)
+        src_bytes = rt.session.channel.total_bytes - src_b0
+        # the span this board actually hosted, incl. the capture stall
+        src.stats.busy_ticks += max(0, t1 - handle.mark)
+        src.evict()
+        # destination: re-image (warm board with the base image is free),
+        # then restore — full chain, or just the delta when the base was
+        # pre-copied into the queue pair still live on this board (the
+        # session identity check matters: a board re-provisioned for
+        # another job in between keeps the image key but not the state)
+        delta_resident = (base is not None and dst.provisioned
+                          and dst.session is base.resident_session)
+        prov = 0 if delta_resident \
+            else dst.provision_ticks_for(handle.image_key)
+        dst_sess = dst.session if delta_resident \
+            else dst.provision(handle.image_key)
+        dst_b0 = dst_sess.channel.total_bytes
+        shipped = snap.wire_pages() if delta_resident \
+            else len(snap.effective_pages())
+        t2 = snapmod.restore(dst_sess, snap, at=t1 + prov,
+                             category="migrate",
+                             delta_only=delta_resident, set_ticks=False)
+        # align the fresh board's clock with the modelled resume tick —
+        # a host-side model adjustment (the tick counter is the model's
+        # clock, not shipped state), so it crosses no wire
+        dst_sess.t.csr_write(0, "ticks", t2)
+        rt.retarget(dst_sess)
+        handle.device = dst
+        handle.mark = t1 + prov
+        mig = MigrationReport(
+            job_id=handle.job.job_id, src=src.id, dst=dst.id,
+            delta=delta_resident,
+            pages_total=len(snap.effective_pages()),
+            pages_shipped=shipped,
+            src_bytes=src_bytes,
+            dst_bytes=dst_sess.channel.total_bytes - dst_b0,
+            capture_start=t0, capture_done=t1,
+            provision_ticks=prov, restore_done=t2)
+        handle.migrations.append(mig)
+        return mig
 
     def run(self) -> FleetReport:
         """Place and run every queued job; aggregate across devices.

@@ -68,6 +68,11 @@ _add("HFutex", "inst", 2 + WORD + 1, 0, 2)    # mask-cache update
 # Word-level
 _add("RegR", "word", 3, WORD, _REG)
 _add("RegW", "word", 3 + WORD, 0, _REG)
+# CSR access (snapshot/restore subsystem): csrr/csrw through a staging
+# GPR — one injected CSR instruction plus a Reg-port transfer each way.
+# The CSR is named by a 1-byte selector in the request.
+_add("CsrR", "word", 3, WORD, 2 * _INJ + _REG)
+_add("CsrW", "word", 3 + WORD, 0, 2 * _INJ + _REG)
 _add("MemR", "word", 2 + WORD, WORD, 2 * _REG + 2 * _INJ + WORD)
 _add("MemW", "word", 2 + 2 * WORD, 0, 3 * _REG + 2 * _INJ)
 # Page-level (batched 8-16 regs per loop iteration, §IV-C)
@@ -79,6 +84,11 @@ _add("PageR", "page", 2 + WORD, PAGE,
      _REG + PAGE_WORDS * (_INJ + _REG))
 _add("PageW", "page", 2 + WORD + PAGE, 0,
      _REG + PAGE_WORDS * (_INJ + _REG))
+# Page checksum (dirty-page delta capture): the controller walks the page
+# with its loop FSM (the PageS/PageCP machinery) folding each word into a
+# running hash and ships back 8 bytes instead of 4096 — which is exactly
+# why an incremental snapshot is cheap on the wire.
+_add("PageH", "page", 2 + WORD, WORD, _REG + PAGE_WORDS * (_INJ + 1))
 # Perf counters
 _add("Tick", "perf", 1, WORD, 1)
 _add("UTick", "perf", 2, WORD, 1)
@@ -106,6 +116,8 @@ DIRECT_BYTES: dict[str, int] = {
     "HFutex": DIRECT_REGW_BYTES + _LI,   # no controller cache: a RegW
     "RegR": DIRECT_REGR_BYTES,
     "RegW": DIRECT_REGW_BYTES,
+    "CsrR": DIRECT_INJ_BYTES + DIRECT_REGR_BYTES,        # csrr x1, + read
+    "CsrW": DIRECT_REGW_BYTES + DIRECT_INJ_BYTES,        # write x1, csrw
     "MemR": _LI + DIRECT_INJ_BYTES + DIRECT_REGR_BYTES,
     "MemW": 2 * _LI + DIRECT_INJ_BYTES,
     # per-page: loop of li+sd per word (no on-chip loop FSM)
@@ -113,6 +125,8 @@ DIRECT_BYTES: dict[str, int] = {
     "PageCP": PAGE_WORDS * (4 * DIRECT_INJ_BYTES) + 2 * _LI,
     "PageR": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
     "PageW": PAGE_WORDS * (DIRECT_REGW_BYTES + DIRECT_INJ_BYTES) + _LI,
+    # no on-chip hash FSM in direct mode: the host reads the whole page
+    "PageH": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
     "Tick": 10,
     "UTick": 10,
 }
@@ -127,10 +141,24 @@ def payload_bytes(name: str) -> int:
     """Data payload a request intrinsically must move (page/word data);
     the rest of its wire size is protocol overhead."""
     return {"PageR": PAGE, "PageW": PAGE, "MemR": WORD, "MemW": 2 * WORD,
-            "RegR": WORD, "RegW": WORD, "Redirect": WORD, "SetMMU": WORD,
+            "RegR": WORD, "RegW": WORD, "CsrR": WORD, "CsrW": WORD,
             "Next": 3 * WORD, "Tick": WORD, "UTick": WORD,
+            "Redirect": WORD, "SetMMU": WORD, "PageH": WORD,
             "PageS": WORD, "PageCP": 0, "FlushTLB": 0, "SyncI": 0,
             "HFutex": WORD}[name]
+
+
+def page_hash(words) -> int:
+    """The PageH checksum: a 64-bit digest of one 4096-byte page's
+    content.  Deterministic across processes and backends (it keys
+    dirty-page delta capture, so two captures of identical memory must
+    agree bit-for-bit)."""
+    import hashlib
+
+    import numpy as np
+    data = np.ascontiguousarray(words, dtype=np.uint64).tobytes()
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(),
+                          "little")
 
 
 def _check_specs():

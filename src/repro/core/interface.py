@@ -44,6 +44,7 @@ class Target(Protocol):
     def clear_pending(self, c: int) -> None: ...
     # Priv / CSR ----------------------------------------------------------
     def csr_read(self, c: int, name: str) -> int: ...
+    def csr_write(self, c: int, name: str, v: int) -> None: ...
     def set_satp(self, c: int, v: int) -> None: ...
     def sfence(self, c: int) -> None: ...
     # Reg bundle ----------------------------------------------------------
@@ -113,6 +114,23 @@ class JaxTarget:
 
     def get_priv(self, c):
         return int(np.asarray(self.st.priv[c]))
+
+    def csr_write(self, c, name, v):
+        """Host-side CSR/core-state write (CsrW's device half; snapshot
+        restore).  Each field keeps its device dtype; ``ticks`` is the
+        global clock scalar."""
+        st = self.st
+        if name == "ticks":
+            self.st = st._replace(ticks=jnp.uint64(v))
+            return
+        arr = getattr(st, name)
+        if name == "pending":
+            val = bool(v)
+        elif name == "priv":
+            val = np.uint32(v)
+        else:
+            val = np.uint64(v)
+        self.st = st._replace(**{name: arr.at[c].set(val)})
 
     def set_satp(self, c, v):
         self.st = self.st._replace(satp=self.st.satp.at[c].set(np.uint64(v)))

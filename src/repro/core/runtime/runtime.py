@@ -84,6 +84,7 @@ class FaseRuntime:
                  fault_preload: int = 16, session: str = "async",
                  queue_depth: int = 8, coalesce_ticks: int = 50,
                  ctrl_serialize: bool = False, arg_prefetch: bool = False,
+                 bill_switch_host: bool = False,
                  session_obj=None, traffic_hook=None):
         assert mode in ("fase", "oracle")
         assert session in ("async", "sync")
@@ -116,6 +117,12 @@ class FaseRuntime:
         # transaction at Next time instead of lazy per-arg round trips —
         # trades bytes for round trips (wins on latency-dominated links)
         self.arg_prefetch = arg_prefetch
+        # non-syscall host latency: since the req0 re-baseline, requests
+        # issued outside syscall handling (context-switch save/restore,
+        # scheduler redirects) bill no host_us_per_req anywhere.  This
+        # flag charges those paths their own host cost; off by default —
+        # the free-switch arithmetic is the golden-tick contract.
+        self.bill_switch_host = bill_switch_host
         # co-residency hook: called with the modelled time every scheduler
         # iteration so background (e.g. Layer-B serving) traffic can be
         # injected onto this runtime's shared link
@@ -178,6 +185,18 @@ class FaseRuntime:
         self.stats["runtime_ticks"] += host
         return t + host
 
+    def _charge_switch(self, n_req: int) -> int:
+        """Host latency of a non-syscall dispatch path (context-switch
+        save/restore, scheduler redirects) — the same per-request model
+        :meth:`charge` applies to syscalls, gated behind
+        ``bill_switch_host`` (default off: golden ticks)."""
+        if self.mode != "fase" or not self.bill_switch_host:
+            return 0
+        host = int((self.host_base_us + self.host_us_per_req * n_req) *
+                   self.ticks_per_us)
+        self.stats["runtime_ticks"] += host
+        return host
+
     # ---------------- context management --------------------------------
     # The context paths are the transaction showcase (§IV-B): a save is
     # one 31-RegR batch, a switch-in one RegW*31+Redirect batch — one
@@ -190,7 +209,7 @@ class FaseRuntime:
         res = self.session.submit(txn, t, stream=cpu)
         thread.regs = [0] + list(res.values)
         thread.pc = pc
-        return res.done
+        return res.done + self._charge_switch(len(txn.requests))
 
     def switch_in(self, cpu: int, thread, t: int) -> int:
         txn = HtpTransaction()
@@ -208,6 +227,7 @@ class FaseRuntime:
             self.stats["kernel_ticks"] += kc
             t += kc
         txn.redirect(cpu, thread.pc, "ctxsw")
+        t += self._charge_switch(len(txn.requests))
         t = self.session.submit(txn, t, stream=cpu).done
         self.sched.assign(cpu, thread.tid)
         self.sched.ctx_switches += 1
@@ -357,9 +377,28 @@ class FaseRuntime:
 
     def run(self, max_ticks: int = 1 << 48,
             max_exceptions: int = 1 << 30) -> Report:
+        rep = self.run_slice(None, max_ticks=max_ticks,
+                             max_exceptions=max_exceptions)
+        assert rep is not None
+        return rep
+
+    def run_slice(self, pause_ticks: int | None,
+                  max_ticks: int = 1 << 48,
+                  max_exceptions: int = 1 << 30) -> Report | None:
+        """The exception loop, pausable: runs until every thread exits
+        (returns the final :class:`Report`) or modelled time reaches
+        ``pause_ticks`` (returns None).  A pause lands at a loop
+        boundary — every raised exception handled, no half-applied host
+        work — so the target is checkpointable
+        (:mod:`repro.core.snapshot`) and a later ``run_slice``/``run``
+        resumes exactly where it left off.  ``pause_ticks=None`` is the
+        plain uninterrupted run."""
         while self.sched.live_threads() > 0:
+            now = self.target.get_ticks()
+            if pause_ticks is not None and now >= pause_ticks:
+                return None
             self.async_io.poll()
-            self._dispatch_ready(self.target.get_ticks())
+            self._dispatch_ready(now)
             if not self.sched.running:
                 if self.async_io.busy or any(
                         th.state == "ready"
@@ -368,7 +407,9 @@ class FaseRuntime:
                 raise Deadlock(
                     f"no runnable threads; futex queues: "
                     f"{ {k: list(v) for k, v in self.sched.futex_q.items()} }")
-            self.target.run()
+            budget = 1 << 62 if pause_ticks is None \
+                else max(pause_ticks - now, 1)
+            self.target.run(budget)
             now = self.target.get_ticks()
             if self.traffic_hook is not None:
                 self.traffic_hook(now)
@@ -379,6 +420,25 @@ class FaseRuntime:
             for cpu in self.target.pending_cores():
                 self._handle_exception(cpu, now)
         return self.finish()
+
+    # ---------------- live migration -------------------------------------
+    def retarget(self, session) -> None:
+        """Adopt a restored target behind a new queue pair (live
+        migration, :meth:`repro.core.fleet.FleetRuntime.migrate`).  All
+        host-side state — scheduler, software page tables, page
+        allocator, fd table, stats — carries over untouched: in FASE the
+        host owns it, only the device half moved.  The new board's
+        HFutex mask cache starts cold (masks re-insert on the next futex
+        syscalls), and :meth:`finish`'s traffic view covers the new link
+        only — per-link splits live in the fleet's device stats."""
+        assert self.mode == "fase", "migration models a live link"
+        assert session.t is not None, "need a session wrapping a target"
+        assert session.t.n_cores == self.target.n_cores
+        assert session.t.mem_bytes == self.target.mem_bytes
+        self.target = session.t
+        self.session = session
+        self.vm.sess = session
+        self.link = session.channel.name
 
     def finish(self) -> Report:
         # final counter harvest: Tick + per-core UTick as one transaction,

@@ -121,6 +121,12 @@ class HtpTransaction:
     def reg_write(self, cpu, idx, val, category=""):
         return self.add(HtpRequest("RegW", cpu, (idx, val), category))
 
+    def csr_read(self, cpu, name, category=""):
+        return self.add(HtpRequest("CsrR", cpu, (name,), category))
+
+    def csr_write(self, cpu, name, val, category=""):
+        return self.add(HtpRequest("CsrW", cpu, (name, val), category))
+
     def mem_read(self, cpu, pa, category=""):
         return self.add(HtpRequest("MemR", cpu, (pa,), category))
 
@@ -138,6 +144,9 @@ class HtpTransaction:
 
     def page_write(self, cpu, ppn, words, category=""):
         return self.add(HtpRequest("PageW", cpu, (ppn, words), category))
+
+    def page_hash(self, cpu, ppn, category=""):
+        return self.add(HtpRequest("PageH", cpu, (ppn,), category))
 
     def tick(self):
         return self.add(HtpRequest("Tick"))
@@ -290,6 +299,10 @@ class HtpSession:
             return t.reg_read(cpu, a[0])
         elif op == "RegW":
             t.reg_write(cpu, a[0], a[1])
+        elif op == "CsrR":
+            return t.csr_read(cpu, a[0])
+        elif op == "CsrW":
+            t.csr_write(cpu, a[0], a[1])
         elif op == "MemR":
             return t.mem_read_word(a[0])
         elif op == "MemW":
@@ -302,6 +315,8 @@ class HtpSession:
             return t.page_read(a[0])
         elif op == "PageW":
             t.page_write(a[0], a[1])
+        elif op == "PageH":
+            return htp.page_hash(t.page_read(a[0]))
         elif op == "Tick":
             return t.get_ticks()
         elif op == "UTick":

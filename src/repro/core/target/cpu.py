@@ -40,6 +40,16 @@ def _u(x):
     return jnp.uint64(x)
 
 
+#: Per-core architectural state a target checkpoint captures/restores
+#: (:mod:`repro.core.snapshot`), in capture order.  Every name is both a
+#: :class:`CpuState` field and a same-named per-core list on the PySim
+#: twin, which is what makes a snapshot backend-portable; ``ticks`` (the
+#: global clock) is captured separately via the Tick request.
+SNAPSHOT_CORE_FIELDS = ("pc", "priv", "pending", "stall_until", "satp",
+                        "mcause", "mepc", "mtval", "res", "uticks",
+                        "instret")
+
+
 class CpuState(NamedTuple):
     regs: jax.Array          # (nc, 32) u64
     pc: jax.Array            # (nc,) u64

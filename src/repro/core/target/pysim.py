@@ -162,6 +162,22 @@ class PySim:
     def csr_read(self, c, name):
         return getattr(self, name)[c]
 
+    def csr_write(self, c, name, v):
+        """Host-side CSR/core-state write (the CsrW request's device
+        half; snapshot restore).  ``ticks`` addresses the global clock;
+        ``pending``/``priv`` keep their native representations.  A satp
+        write through here does NOT flush translation caches — restore
+        batches end with explicit FlushTLB requests, like any other
+        host-driven PTE change."""
+        if name == "ticks":
+            self.ticks = v & MASK64
+        elif name == "pending":
+            self.pending[c] = bool(v)
+        elif name == "priv":
+            self.priv[c] = int(v)
+        else:
+            getattr(self, name)[c] = v & MASK64
+
     def get_priv(self, c):
         return self.priv[c]
 

@@ -30,18 +30,22 @@ class PagedKVManager:
         self.refcnt = {}
         self.seqs: dict[int, SeqPages] = {}
         self.prefix_index: dict[tuple, list[int]] = {}
-        # pending device commands (drained by the engine each step)
-        self.pending_copies: list[tuple[int, int]] = []
-        self.pending_zeros: list[int] = []
+        # pending device commands (drained by the engine each step),
+        # attributed to the sequence that caused them — under a sharded
+        # fleet a page command belongs on the board holding that
+        # sequence's slot, so the engine routes by owner
+        self.pending_copies: list[tuple[int, tuple[int, int]]] = []
+        self.pending_zeros: list[tuple[int, int]] = []
         self.stats = {"alloc": 0, "cow": 0, "prefix_hits": 0, "freed": 0}
 
-    def _alloc(self) -> int:
+    def _alloc(self, owner: int = -1) -> int:
         if not self.free:
             raise OutOfPages
         p = self.free.pop()
         self.refcnt[p] = 1
         self.stats["alloc"] += 1
-        self.pending_zeros.append(p)      # lazy-init: PageS(0) on device
+        # lazy-init: PageS(0) on device
+        self.pending_zeros.append((owner, p))
         return p
 
     def _unref(self, p: int):
@@ -69,14 +73,14 @@ class PagedKVManager:
                 self.stats["prefix_hits"] += 1
                 sp.pages.append(page)
             else:
-                sp.pages.append(self._alloc())
+                sp.pages.append(self._alloc(seq_id))
         # register every full-page prefix boundary for future sharing
         for i in range(n_full):
             key = prompt_tokens[:(i + 1) * PAGE_SIZE]
             self.prefix_index.setdefault(key, list(sp.pages[:i + 1]))
         # tail page (partial) is always private
         if len(prompt_tokens) % PAGE_SIZE or not prompt_tokens:
-            sp.pages.append(self._alloc())
+            sp.pages.append(self._alloc(seq_id))
         sp.length = len(prompt_tokens)
         self.seqs[seq_id] = sp
         return sp
@@ -86,12 +90,13 @@ class PagedKVManager:
         sp = self.seqs[seq_id]
         page_idx = sp.length // PAGE_SIZE
         while page_idx >= len(sp.pages):
-            sp.pages.append(self._alloc())
+            sp.pages.append(self._alloc(seq_id))
         page = sp.pages[page_idx]
         if self.refcnt[page] > 1:
-            new = self._alloc()
-            self.pending_zeros.remove(new)
-            self.pending_copies.append((page, new))   # PageCP on device
+            new = self._alloc(seq_id)
+            self.pending_zeros.remove((seq_id, new))
+            # PageCP on device
+            self.pending_copies.append((seq_id, (page, new)))
             self._unref(page)
             sp.pages[page_idx] = new
             self.stats["cow"] += 1
@@ -114,6 +119,8 @@ class PagedKVManager:
         return bt
 
     def drain_commands(self):
+        """Pending device commands as ``(owner_seq_id, payload)`` pairs
+        (owner ``-1`` = unattributed), cleared on return."""
         copies, zeros = self.pending_copies, self.pending_zeros
         self.pending_copies, self.pending_zeros = [], []
         return copies, zeros

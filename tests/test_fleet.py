@@ -1,14 +1,16 @@
 """Fleet layer: (device, hart) stream routing, placement-policy
-correctness, cross-run determinism, single-device tick-equivalence, and
-the satellite features that ride the same PR (speculative arg prefetch,
-the sync ctrl_free backport, serving fleet sharding)."""
+correctness, cross-run determinism, single-device tick-equivalence, the
+device lifecycle (billed provisioning, live job migration, serving slot
+migration), and the satellite features that ride the same PRs
+(speculative arg prefetch, the sync ctrl_free backport, serving fleet
+sharding)."""
 import pytest
 
 from repro.core.channel import PcieChannel, UartChannel
 from repro.core.cq import AsyncHtpSession
 from repro.core.fleet import (Device, FleetRouter, FleetRuntime, Job,
                               make_policy)
-from repro.core.fleet.placement import stable_hash
+from repro.core.fleet.placement import image_key_of, stable_hash
 from repro.core.runtime import FaseRuntime
 from repro.core.session import HtpSession, HtpTransaction
 from repro.core.target.pysim import PySim
@@ -237,6 +239,167 @@ def test_mixed_link_fleet():
 
 
 # ---------------------------------------------------------------------------
+# device lifecycle: billed provisioning
+# ---------------------------------------------------------------------------
+def test_provisioning_charges_on_image_change_only():
+    d = Device(0, lambda: PySim(1, 1 << 20), provision_us=100.0)
+    assert d.provision_ticks_for("a") == 10_000      # 100 us @ 100 MHz
+    d.provision("a")
+    assert (d.stats.provisions, d.stats.provision_ticks,
+            d.clock) == (1, 10_000, 10_000)
+    d.provision("a")                                 # warm: same image
+    assert d.stats.provisions == 1 and d.clock == 10_000
+    assert d.provision_ticks_for("a") == 0
+    d.provision("b")                                 # re-flash
+    assert d.stats.provisions == 2 and d.clock == 20_000
+    # default-off provisioning stays free (golden behaviour)
+    free = Device(1, lambda: PySim(1, 1 << 20))
+    free.provision("a")
+    free.provision("b")
+    assert free.stats.provisions == 0 and free.clock == 0
+
+
+def test_least_loaded_provision_aware_vs_blind():
+    """The aware greedy folds the flash charge it would trigger into
+    the clock comparison; the blind greedy re-flashes."""
+    def mk():
+        return [Device(i, lambda: PySim(1, 1 << 20), provision_us=100.0)
+                for i in range(2)]
+    job_a, job_b = Job("hello"), Job("coremark")
+    assert image_key_of(job_a) == "hello" != image_key_of(job_b)
+
+    devs = mk()
+    devs[0].provision("hello")               # warm board, 10k flash paid
+    devs[0].stats.busy_ticks = 1_000         # ... and 1k of queue ahead
+    aware = make_policy("least_loaded")
+    blind = make_policy("least_loaded_blind")
+    # aware: warm dev0 at 1k beats cold dev1 at 0 + 10k flash
+    assert aware.place(job_a, devs).id == 0
+    # blind: raw clocks only — picks the cold board and re-flashes
+    assert blind.place(job_a, devs).id == 1
+    # a different image gets no warmth credit anywhere: 1k+10k vs 0+10k
+    assert aware.place(job_b, devs).id == 1
+
+
+def test_fleet_runtime_bills_provisioning_end_to_end():
+    fr = FleetRuntime(n_devices=2, make_target=lambda: PySim(1, 1 << 22),
+                      link="pcie", placement="least_loaded",
+                      provision_us=50.0)
+    fr.submit(Job("hello"), replicas=4)
+    rep = fr.run()
+    total_prov = sum(d.stats.provisions for d in fr.devices)
+    assert total_prov >= 2                      # both boards flashed once
+    # same-image repeats re-use the flash: far fewer flashes than jobs
+    assert total_prov < 4
+    assert all(d.stats.provision_ticks ==
+               d.stats.provisions * 5_000 for d in fr.devices)
+    # the charge lands in the device clocks (and hence the makespan)
+    assert rep.makespan_ticks > 5_000
+
+
+# ---------------------------------------------------------------------------
+# device lifecycle: live job migration
+# ---------------------------------------------------------------------------
+def _migration_fleet():
+    return FleetRuntime(n_devices=2, make_target=lambda: PySim(1, 1 << 22),
+                        link="pcie")
+
+
+def test_migrate_preserves_output_and_bills_both_links():
+    base = _migration_fleet()
+    ref = base.run_job(base.devices[0], Job("hello"))
+
+    fr = _migration_fleet()
+    h = fr.start_job(Job("hello"), fr.devices[0])
+    assert fr.step_job(h, pause_ticks=ref.report.ticks // 2) is None
+    mig = fr.migrate(h, fr.devices[1])
+    res = fr.finish_job(h)
+
+    # functionally invisible, temporally visible
+    assert res.report.stdout == ref.report.stdout
+    assert res.report.exit_code == ref.report.exit_code
+    assert res.report.ticks > ref.report.ticks
+    # the checkpoint paid real bytes on BOTH links
+    assert mig.src_bytes > 4096 * mig.pages_shipped
+    assert mig.dst_bytes > 4096 * mig.pages_shipped
+    assert mig.downtime_ticks > 0
+    assert mig.pages_shipped == mig.pages_total > 0
+    # occupancy split: source hosted the first span (no completion),
+    # destination the rest (and the completed job)
+    src, dst = fr.devices
+    assert (src.stats.jobs, dst.stats.jobs) == (0, 1)
+    assert src.stats.busy_ticks > 0 and dst.stats.busy_ticks > 0
+    assert h.migrations == [mig] and h.device is dst
+
+
+def test_migrate_delta_precopy_ships_less():
+    base = _migration_fleet()
+    ref = base.run_job(base.devices[0], Job("hello"))
+
+    fr = _migration_fleet()
+    h = fr.start_job(Job("hello"), fr.devices[0])
+    fr.step_job(h, pause_ticks=ref.report.ticks // 4)
+    basesnap = fr.prepare_migration(h, fr.devices[1])
+    fr.step_job(h, pause_ticks=ref.report.ticks // 2)
+    mig = fr.migrate(h, fr.devices[1], base=basesnap)
+    res = fr.finish_job(h)
+
+    assert res.report.stdout == ref.report.stdout
+    assert mig.delta
+    assert mig.pages_shipped < mig.pages_total    # only the dirty set
+    # the delta's downtime restore is cheaper than a full image ship
+    assert mig.dst_bytes < 4096 * mig.pages_total
+
+
+def test_migrate_with_stale_precopy_falls_back_to_full_restore():
+    """A pre-copied base is only delta-restorable into the exact queue
+    pair it was shipped to: if the destination board ran another job in
+    between (re-provisioned, same image name), migrate() must detect
+    the stale base and ship the full chain — never a delta over a
+    stranger's memory."""
+    base = _migration_fleet()
+    ref = base.run_job(base.devices[0], Job("hello"))
+
+    fr = _migration_fleet()
+    h = fr.start_job(Job("hello"), fr.devices[0])
+    fr.step_job(h, pause_ticks=ref.report.ticks // 4)
+    basesnap = fr.prepare_migration(h, fr.devices[1])
+    # another same-image job claims (and re-provisions) the destination
+    fr.run_job(fr.devices[1], Job("hello"))
+    fr.step_job(h, pause_ticks=ref.report.ticks // 2)
+    mig = fr.migrate(h, fr.devices[1], base=basesnap)
+    res = fr.finish_job(h)
+    assert res.report.stdout == ref.report.stdout
+    # the restore shipped the whole image, not just the dirty delta —
+    # and the report says so
+    assert not mig.delta
+    assert mig.pages_shipped == mig.pages_total
+    assert mig.dst_bytes > 4096 * mig.pages_total
+
+
+def test_migration_is_deterministic():
+    def once():
+        base = _migration_fleet()
+        ref = base.run_job(base.devices[0], Job("hello"))
+        fr = _migration_fleet()
+        h = fr.start_job(Job("hello"), fr.devices[0])
+        fr.step_job(h, pause_ticks=ref.report.ticks // 2)
+        mig = fr.migrate(h, fr.devices[1])
+        res = fr.finish_job(h)
+        return (res.report.ticks, mig.src_bytes, mig.dst_bytes,
+                mig.downtime_ticks, mig.pages_shipped)
+    assert once() == once()
+
+
+def test_migrate_requires_distinct_destination():
+    fr = _migration_fleet()
+    h = fr.start_job(Job("hello"), fr.devices[0])
+    fr.step_job(h, pause_ticks=1000)
+    with pytest.raises(AssertionError):
+        fr.migrate(h, fr.devices[0])
+
+
+# ---------------------------------------------------------------------------
 # serving across the fleet
 # ---------------------------------------------------------------------------
 def test_serving_command_batches_shard_across_devices():
@@ -261,6 +424,54 @@ def test_serving_command_batches_shard_across_devices():
     assert st["bytes_by_cat"] == dict(single.channel.bytes_by_cat)
     assert st["per_device"][0]["wire_bytes"] == \
         st["per_device"][1]["wire_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# serving slot migration (load-aware placement across a skewed fleet)
+# ---------------------------------------------------------------------------
+def _serve_on_fleet(links, policy):
+    from repro.configs import CONFIGS
+    from repro.models import core as M
+    from repro.serving.engine import Request, ServeEngine
+    cfg = CONFIGS["qwen3-8b"].smoke()
+    params = M.init_params(cfg, 0)
+    fr = FleetRuntime(make_target=lambda: PySim(1, 1 << 20),
+                      n_devices=len(links), links=list(links))
+    eng = ServeEngine(cfg, params, slots=4, max_seq=128, poll_every=2,
+                      fleet=fr, slot_policy=policy, rebalance_every=2)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=[3 + i, 7, 11], max_new=12,
+                           eos=1))
+    done = eng.run()
+    return eng, sorted((r.rid, tuple(r.out)) for r in done)
+
+
+def test_slot_migration_moves_off_slow_board_and_keeps_tokens():
+    """Skewed fleet (one board behind a far PCIe hop): the least_loaded
+    slot policy migrates decode slots off the slow board — paying
+    block-table + KV re-shipment on both links — and cuts the per-step
+    makespan; tokens are bit-identical to sticky sharding."""
+    sticky, out_s = _serve_on_fleet(["pcie", "pcie_far"], "sticky")
+    ll, out_l = _serve_on_fleet(["pcie", "pcie_far"], "least_loaded")
+    assert out_s == out_l                          # timing-only feature
+    assert ll.slot_migrations > 0
+    assert ll.traffic.by_cat["slot_migrate"] > 0   # billed, not free
+    mean = lambda xs: sum(xs) / len(xs)            # noqa: E731
+    assert mean(ll.step_spans) < mean(sticky.step_spans)
+    # the slow board ends up holding no slots
+    by_dev = dict(ll._dev_slots)
+    assert by_dev[1] == [] and sorted(by_dev[0]) == [0, 1, 2, 3]
+
+
+def test_slot_migration_noop_on_balanced_fleet():
+    """A homogeneous fleet is a fixed point: no moves, tick-identical
+    to sticky sharding."""
+    sticky, out_s = _serve_on_fleet(["pcie", "pcie"], "sticky")
+    ll, out_l = _serve_on_fleet(["pcie", "pcie"], "least_loaded")
+    assert out_s == out_l
+    assert ll.slot_migrations == 0
+    assert ll.link_tick == sticky.link_tick
+    assert "slot_migrate" not in ll.traffic.by_cat
 
 
 # ---------------------------------------------------------------------------

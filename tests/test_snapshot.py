@@ -1,0 +1,249 @@
+"""Snapshot/restore subsystem: cross-backend bit-identical round trips,
+dirty-page delta capture, wire billing, non-perturbation of snapshot-free
+runs, and the non-syscall host-latency satellite."""
+import numpy as np
+import pytest
+
+from repro.core import htp
+from repro.core import snapshot as snap
+from repro.core.channel import OracleChannel, PcieChannel, UartChannel
+from repro.core.interface import JaxTarget
+from repro.core.runtime import FaseRuntime
+from repro.core.session import HtpSession
+from repro.core.target import asm, isa
+from repro.core.target.cpu import SNAPSHOT_CORE_FIELDS
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build
+
+MEM = 1 << 21
+
+SRC = """
+_start:
+    li sp, 0x110000
+    la s0, counter
+    la s1, scratch
+    li t1, 400
+loop:
+    lw t2, 0(s0)
+    addi t2, t2, 3
+    sw t2, 0(s0)
+    andi t3, t1, 63
+    slli t3, t3, 3
+    add t4, s1, t3
+    sd t2, 0(t4)
+    amoadd.d t5, t2, (s0)
+    addi t1, t1, -1
+    bnez t1, loop
+    li a7, 93
+    ecall
+.data
+counter: .dword 0
+scratch: .zero 512
+"""
+
+
+def _build_tables(t):
+    root_ppn, l1_ppn, l0_ppn = 2, 3, 4
+    t.mem_write_word(root_ppn * 4096, (l1_ppn << 10) | isa.PTE_V)
+    t.mem_write_word(l1_ppn * 4096, (l0_ppn << 10) | isa.PTE_V)
+    flags = (isa.PTE_V | isa.PTE_R | isa.PTE_W | isa.PTE_X | isa.PTE_U |
+             isa.PTE_A | isa.PTE_D)
+    for vpn0 in list(range(16, 96)) + list(range(256, 272)):
+        t.mem_write_word(l0_ppn * 4096 + vpn0 * 8, (vpn0 << 10) | flags)
+    for c in range(t.n_cores):
+        t.set_satp(c, (8 << 60) | root_ppn)
+
+
+def _load(t, img):
+    for seg in img.segments:
+        data = bytes(seg.data)
+        n = (len(data) + 7) // 8
+        words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+        for i, w in enumerate(words):
+            t.mem_write_word(seg.vaddr + 8 * i, int(w))
+    _build_tables(t)
+    t.redirect(0, img.entry)
+
+
+def _fresh(cls):
+    t = cls(1, MEM)
+    _load(t, asm.assemble(SRC))
+    return t
+
+
+def _cap(t):
+    return snap.capture(HtpSession(t, UartChannel()), at=0)[0]
+
+
+# ---------------------------------------------------------------------------
+# cross-backend fidelity (the acceptance contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("src_cls,dst_cls", [(PySim, JaxTarget),
+                                             (JaxTarget, PySim)])
+def test_cross_backend_roundtrip_bit_identical(src_cls, dst_cls):
+    """Capture on one backend, restore into the other, run N more
+    instructions on BOTH, capture again: every architectural bit must
+    agree — including a second migration-grade leg to completion."""
+    src = _fresh(src_cls)
+    src.run(max_cycles=250)                    # mid-loop, dirty state
+    s0 = _cap(src)
+
+    dst = dst_cls(1, MEM)
+    snap.restore(HtpSession(dst, UartChannel()), s0, at=0)
+    assert s0.same_state(_cap(dst)), "restore must reproduce the capture"
+    assert dst.get_ticks() == src.get_ticks()
+
+    src.run(max_cycles=300)
+    dst.run(max_cycles=300)
+    s_a, s_b = _cap(src), _cap(dst)
+    assert s_a.same_state(s_b)
+    for name in ("pc", "satp", "mcause", "mepc", "mtval"):
+        assert src.csr_read(0, name) == dst.csr_read(0, name), name
+
+    # run both to the final ecall: same trap, same retire counters
+    for t in (src, dst):
+        while not t.pending_cores():
+            t.run(max_cycles=1000)
+    assert _cap(src).same_state(_cap(dst))
+    assert src.get_instret(0) == dst.get_instret(0)
+
+
+def test_snapshot_values_are_u64_normalised():
+    """Backend-internal representations (PySim's -1 LR sentinel) never
+    leak into the format."""
+    ps = _fresh(PySim)
+    ps.run(max_cycles=50)
+    s = _cap(ps)
+    res_idx = SNAPSHOT_CORE_FIELDS.index("res")
+    assert s.cores[0].csrs[res_idx] == (1 << 64) - 1     # not -1
+    assert all(0 <= v < (1 << 64)
+               for core in s.cores for v in core.regs + core.csrs)
+
+
+# ---------------------------------------------------------------------------
+# delta capture
+# ---------------------------------------------------------------------------
+def test_delta_ships_only_dirty_pages_and_restores_identically():
+    ps = _fresh(PySim)
+    ps.run(max_cycles=200)
+    sess = HtpSession(ps, UartChannel())
+    base, _ = snap.capture(sess, at=0)
+    n_cand = len(base.page_hashes)
+    assert base.wire_pages() == n_cand            # full capture ships all
+
+    ps.run(max_cycles=200)                        # dirty a few pages
+    reqs0 = dict(sess.stats.requests)
+    delta, _ = snap.capture(sess, at=0, base=base)
+    reqs = sess.stats.requests
+    # every candidate was hashed on-device, only the dirty ones read
+    assert reqs["PageH"] - reqs0.get("PageH", 0) >= n_cand
+    assert 0 < delta.wire_pages() < n_cand
+    assert delta.parent is base
+
+    # base + delta chain restores to the same state as a full capture
+    full = _cap(ps)
+    dst = PySim(1, MEM)
+    snap.restore(HtpSession(dst, UartChannel()), delta, at=0)
+    assert full.same_state(_cap(dst))
+
+
+# ---------------------------------------------------------------------------
+# wire billing
+# ---------------------------------------------------------------------------
+def test_capture_and_restore_bill_the_channel():
+    ps = _fresh(PySim)
+    ps.run(max_cycles=100)
+    ch = UartChannel()
+    sess = HtpSession(ps, ch)
+    s, done = snap.capture(sess, at=0)
+    assert done > 0                                # uart time is real
+    assert ch.bytes_by_cat["sys:snapshot"] > 0
+    # page payloads dominate: at least a PageR response per shipped page
+    assert ch.total_bytes > 4096 * s.wire_pages()
+
+    dst = PySim(1, MEM)
+    ch2 = UartChannel()
+    done2 = snap.restore(HtpSession(dst, ch2), s, at=0)
+    assert done2 > 0
+    assert ch2.bytes_by_cat["sys:restore"] > 0
+    assert ch2.total_bytes > 4096 * s.wire_pages()
+
+    # the new Table II rows stay consistent with the direct-mode table
+    for op in ("CsrR", "CsrW", "PageH"):
+        assert op in htp.SPECS and op in htp.DIRECT_BYTES
+        assert htp.SPECS[op].total_bytes >= htp.payload_bytes(op)
+    w = np.arange(512, dtype=np.uint64)
+    assert htp.page_hash(w) == htp.page_hash(w.copy())
+    assert htp.page_hash(w) != htp.page_hash(w + 1)
+
+
+# ---------------------------------------------------------------------------
+# a snapshot-free run is unchanged; an oracle-link observer is free
+# ---------------------------------------------------------------------------
+def test_runtime_unperturbed_by_pause_and_oracle_snapshot():
+    """UART tick-identity: pausing mid-run (run_slice) and checkpointing
+    through a zero-time oracle observer session must not move a single
+    tick of the run — and the snapshot-free path through the refactored
+    loop reproduces the plain run exactly."""
+    def plain():
+        rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="uart")
+        rt.load(build("hello"), ["hello"])
+        return rt.run(max_ticks=1 << 40)
+    ref = plain()
+
+    rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="uart")
+    rt.load(build("hello"), ["hello"])
+    assert rt.run_slice(ref.ticks // 2, max_ticks=1 << 40) is None
+    obs = HtpSession(rt.target, OracleChannel())
+    s, done = snap.capture(obs, at=rt.target.get_ticks())
+    assert done == rt.target.get_ticks()      # oracle link: zero time
+    assert s.wire_pages() > 0
+    rep = rt.run(max_ticks=1 << 40)
+    assert (rep.ticks, rep.traffic_total, rep.stdout) == \
+        (ref.ticks, ref.traffic_total, ref.stdout)
+    assert "sys:snapshot" not in rep.traffic  # observer billed elsewhere
+
+
+# ---------------------------------------------------------------------------
+# satellite: non-syscall host latency (bill_switch_host)
+# ---------------------------------------------------------------------------
+def test_bill_switch_host_default_off_keeps_golden_ticks():
+    def run(**kw):
+        rt = FaseRuntime(PySim(1, 1 << 22), mode="fase", link="uart",
+                         **kw)
+        rt.load(build("hello"), ["hello"])
+        return rt.run(max_ticks=1 << 40)
+    dflt = run()
+    off = run(bill_switch_host=False)
+    on = run(bill_switch_host=True)
+    # default == explicit off: the golden-tick contract
+    assert (dflt.ticks, dflt.traffic_total, dflt.stall) == \
+        (off.ticks, off.traffic_total, off.stall)
+    # billing on: same work, strictly more modelled host time
+    assert on.stdout == dflt.stdout
+    assert on.ticks > dflt.ticks
+    assert on.stall["runtime_ticks"] > dflt.stall["runtime_ticks"]
+    # the switch-in path is billed per request (RegW*31 + Redirect + base)
+    rt = FaseRuntime(PySim(1, 1 << 22), mode="fase",
+                     bill_switch_host=True)
+    host = rt._charge_switch(32)
+    assert host == int((rt.host_base_us + 32 * rt.host_us_per_req) *
+                       rt.ticks_per_us)
+    assert FaseRuntime(PySim(1, 1 << 22),
+                       mode="oracle")._charge_switch(32) == 0
+
+
+def test_pcie_session_snapshot_barriers_on_streams():
+    """On an async queue pair the capture must not start before earlier
+    per-hart submissions complete (tail-token barrier)."""
+    from repro.core.cq import AsyncHtpSession
+    from repro.core.session import HtpTransaction
+    ps = _fresh(PySim)
+    sess = AsyncHtpSession(ps, PcieChannel())
+    txn = HtpTransaction()
+    for i in range(1, 32):
+        txn.reg_read(0, i, "ctxsw")
+    r = sess.submit(txn, 0, stream=0)
+    s, done = snap.capture(sess, at=0)
+    assert done >= r.done
+    assert s.wire_pages() > 0

@@ -16,12 +16,17 @@ def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
                  hfutex=True, files=None, mem=1 << 23, target="pysim",
                  max_ticks=1 << 36, link=None, session="async",
                  queue_depth=8, coalesce_ticks=50, host_us_per_req=12.0,
-                 arg_prefetch=False, ctrl_serialize=False):
+                 arg_prefetch=False, ctrl_serialize=False,
+                 target_opts=None):
+    """``target_opts`` are extra JaxTarget kwargs — the fast-path
+    interpreter knobs (``fast_path``/``issue_width``/``block_words``/
+    ``block_cache``/``fetch_kernel``), e.g. straight from
+    :func:`repro.configs.fase_rocket.target_kwargs`."""
     if target == "pysim":
         tgt = PySim(n_cores, mem)
     else:
         from repro.core.interface import JaxTarget
-        tgt = JaxTarget(n_cores, mem)
+        tgt = JaxTarget(n_cores, mem, **(target_opts or {}))
     rt = FaseRuntime(tgt, mode=mode, baud=baud, hfutex=hfutex, link=link,
                      session=session, queue_depth=queue_depth,
                      coalesce_ticks=coalesce_ticks,

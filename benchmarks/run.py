@@ -14,8 +14,10 @@ def main() -> None:
     from . import (arg_prefetch, baud_sweep, coremark_accuracy,
                    fleet_scale, gapbs_accuracy, hfutex_bench,
                    htp_vs_direct, migration, roofline, scale_sweep,
-                   serving_traffic, speedup, stall_breakdown)
+                   serving_traffic, speedup, stall_breakdown,
+                   target_speed)
     modules = [
+        ("target_speed", target_speed),
         ("htp_vs_direct", htp_vs_direct),
         ("coremark_accuracy", coremark_accuracy),
         ("speedup", speedup),

@@ -1,0 +1,105 @@
+"""Fast-path JaxTarget interpreter throughput (ROADMAP follow-up).
+
+Measures end-to-end instructions/s of the jitted target under the full
+FASE runtime on the GAPBS bc workload, across the interpreter's axes:
+
+  * ``jax_fast``          — batched vector issue + fetch-block cache,
+  * ``jax_fast_nocache``  — batched vector issue, walk every fetch,
+  * ``jax_slow``          — the scalar one-instruction-per-iteration
+    reference loop (the pre-fast-path state of the world),
+  * ``pysim``             — the pure-Python twin, for context.
+
+Each backend executes the same boot + measurement window (modelled-tick
+slices through ``run_slice``, so the workload is identical down to the
+tick); wall time covers only the measurement window, never jit compile.
+``--quick`` shrinks the graph and windows and *fails* (exit 1) if the
+fast path does not at least match the slow path — the CI smoke gate.
+
+Oracle timing mode keeps the host loop out of the measurement: no
+modelled link stalls, so retired instructions dominate the wall clock
+and instructions/s compares interpreters, not channel models.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from .common import save_json
+from repro.configs.fase_rocket import target_kwargs
+from repro.configs.registry import FASE_ROCKET
+from repro.core.interface import JaxTarget
+from repro.core.runtime import FaseRuntime
+from repro.core.target.pysim import PySim
+from repro.core.workloads import build, graphgen
+
+THREADS = 4
+N_CORES = 4
+MEM = 1 << 23
+#: the registry target config is the baseline; each row overrides one axis
+CFG = target_kwargs(FASE_ROCKET)
+
+
+def _instret(tgt):
+    return sum(tgt.get_instret(c) for c in range(tgt.n_cores))
+
+
+def _measure(name, make_target, g, warm_ticks, meas_ticks):
+    tgt = make_target()
+    rt = FaseRuntime(tgt, mode="oracle")
+    rt.load(build("bc"), ["bc", "g.bin", str(THREADS), "1"],
+            files={"g.bin": g})
+    paused = rt.run_slice(warm_ticks, max_ticks=1 << 40)   # compile + boot
+    t0, i0 = tgt.get_ticks(), _instret(tgt)
+    finished = paused is not None
+    wall = 0.0
+    if not finished:
+        w0 = time.time()
+        rep = rt.run_slice(t0 + meas_ticks, max_ticks=1 << 40)
+        wall = time.time() - w0
+        finished = rep is not None
+    insts = _instret(tgt) - i0
+    ips = insts / wall if wall > 0 else 0.0
+    row = dict(name=name, instructions=insts, wall_s=round(wall, 3),
+               ips=round(ips, 1), ticks=tgt.get_ticks() - t0,
+               finished=finished)
+    print(f"target_speed,{name},{ips:.0f},instr={insts} "
+          f"wall={wall:.2f}s", flush=True)
+    return row
+
+
+def run(quick: bool = False):
+    scale = 5 if quick else 7
+    g = graphgen.rmat(scale, 8, weights=True)
+    fast_meas = 100_000 if quick else 400_000
+    slow_meas = 8_000 if quick else 40_000
+    warm = 3_000
+    rows = [
+        _measure("jax_fast",
+                 lambda: JaxTarget(N_CORES, MEM, **CFG),
+                 g, warm, fast_meas),
+        _measure("jax_fast_nocache",
+                 lambda: JaxTarget(N_CORES, MEM,
+                                   **{**CFG, "block_cache": False}),
+                 g, warm, fast_meas),
+        _measure("jax_slow",
+                 lambda: JaxTarget(N_CORES, MEM,
+                                   **{**CFG, "fast_path": False}),
+                 g, warm, slow_meas),
+        _measure("pysim", lambda: PySim(N_CORES, MEM),
+                 g, warm, 4_000_000 if quick else 16_000_000),
+    ]
+    by = {r["name"]: r for r in rows}
+    speedup = by["jax_fast"]["ips"] / max(by["jax_slow"]["ips"], 1e-9)
+    out = dict(quick=quick, workload=f"bc rmat{scale} {THREADS}T",
+               n_cores=N_CORES, rows=rows,
+               fast_vs_slow_speedup=round(speedup, 2))
+    save_json("target_speed.json", out)
+    print(f"target_speed,speedup,{speedup:.1f},fast_vs_slow", flush=True)
+    if quick and speedup < 1.0:
+        print("target_speed: FAST PATH SLOWER THAN SLOW PATH", flush=True)
+        sys.exit(1)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -23,6 +23,21 @@ def runtime_kwargs(cfg: dict = FASE_ROCKET) -> dict:
     return out
 
 
+_TARGET_RENAMED = {"target_fast_path": "fast_path",
+                   "target_issue_width": "issue_width",
+                   "target_block_words": "block_words",
+                   "target_block_cache": "block_cache",
+                   "target_fetch_kernel": "fetch_kernel"}
+
+
+def target_kwargs(cfg: dict = FASE_ROCKET) -> dict:
+    """Keyword surface of :class:`~repro.core.interface.JaxTarget`'s
+    fast-path interpreter from a registry target config (the caller
+    supplies ``n_cores``/``mem_bytes`` positionally)."""
+    return {new: cfg[old] for old, new in _TARGET_RENAMED.items()
+            if old in cfg}
+
+
 _FLEET_KEYS = ("n_devices", "placement", "provision_us")
 _FLEET_RENAMED = {"device_links": "links"}
 

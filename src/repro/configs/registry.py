@@ -68,9 +68,21 @@ xlstm_350m = _add(ModelConfig(
 # async engine, ``qp_depth`` the in-flight transaction cap, and
 # ``qp_coalesce_ticks`` the doorbell-coalescing window (target ticks).
 # On the UART they are inert — the async engine is tick-identical there.
+# The target_* knobs drive the JaxTarget fast-path interpreter
+# (repro.core.target.cpu.run_chunk_fast): batched-issue width, fetch-block
+# size, block-cache enable, and the translate/fetch kernel backend for
+# block fills ("ref" jnp oracle | "pallas"); they trade host speed and
+# compile time only — every setting is bit-identical to PySim.  On CPU
+# the block cache and the no-cache vector path measure within ~10% of
+# each other (results/target_speed.json records both); the cache stays
+# on because the Pallas fill path's contiguous block DMA is the
+# accelerator-side win.
 FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
                    link="uart", baud=921600, l1=32 << 10, l2=256 << 10,
-                   session="async", qp_depth=8, qp_coalesce_ticks=50)
+                   session="async", qp_depth=8, qp_coalesce_ticks=50,
+                   target_fast_path=True, target_issue_width=8,
+                   target_block_words=16, target_block_cache=True,
+                   target_fetch_kernel="ref")
 
 # the same target behind a modelled PCIe/AXI-DMA link (the scale-up
 # direction: bandwidth-rich, latency-dominated — batching + queue-pair

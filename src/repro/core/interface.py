@@ -69,13 +69,35 @@ class JaxTarget:
     State lives in device buffers; ``run`` donates them into the compiled
     while-loop; host-side accesses use tiny donating micro-ops so nothing is
     ever copied wholesale.
+
+    ``fast_path`` (default on) selects the batched-issue vectorized
+    interpreter with the per-core fetch-block cache
+    (:func:`repro.core.target.cpu.run_chunk_fast`); ``fast_path=False``
+    falls back to the scalar one-instruction-per-iteration reference
+    loop.  Both are bit-identical to :class:`~repro.core.target.pysim.\
+PySim` — the knobs trade compile time and host speed, never semantics:
+
+      * ``issue_width`` — ticks retired per compiled loop iteration,
+      * ``block_words`` — fetch-block size in 32-bit slots (power of 2),
+      * ``block_cache=False`` — keep batched issue but re-walk every
+        instruction fetch,
+      * ``fetch_kernel`` — ``"ref"`` (jnp oracle) or ``"pallas"`` for
+        the block-fill translate/fetch chain
+        (:mod:`repro.kernels.page_walk`).
     """
 
     def __init__(self, n_cores: int, mem_bytes: int,
-                 chunk_cycles: int = 1 << 30):
+                 chunk_cycles: int = 1 << 30, fast_path: bool = True,
+                 issue_width: int = 8, block_words: int = 16,
+                 block_cache: bool = True, fetch_kernel: str = "ref"):
         self.nc = n_cores
         self.mem_bytes = mem_bytes
         self.chunk_cycles = chunk_cycles
+        self.fast_path = fast_path
+        self.issue_width = issue_width
+        self.block_words = block_words
+        self.block_cache = block_cache
+        self.fetch_kernel = fetch_kernel
         self.st = _cpu.make_state(n_cores, mem_bytes)
 
     # -- inst stream ------------------------------------------------------
@@ -84,8 +106,15 @@ class JaxTarget:
         return self.nc
 
     def run(self, max_cycles: int = 1 << 62):
-        self.st = _cpu.run_chunk(self.st, self.nc, self.mem_bytes,
-                                 min(max_cycles, self.chunk_cycles))
+        budget = min(max_cycles, self.chunk_cycles)
+        if self.fast_path:
+            self.st = _cpu.run_chunk_fast(
+                self.st, self.nc, self.mem_bytes, budget,
+                self.issue_width, self.block_words, self.block_cache,
+                self.fetch_kernel)
+        else:
+            self.st = _cpu.run_chunk(self.st, self.nc, self.mem_bytes,
+                                     budget)
 
     def redirect(self, c, pc, resume_tick=0):
         st = self.st
@@ -136,6 +165,10 @@ class JaxTarget:
         self.st = self.st._replace(satp=self.st.satp.at[c].set(np.uint64(v)))
 
     def sfence(self, c):
+        # nothing cached across chunks: the slow path walks every access
+        # and the fast path's fetch-block cache lives only inside one
+        # run_chunk_fast call, so any host-driven PTE change is visible
+        # by construction
         pass
 
     # -- regs -----------------------------------------------------------------

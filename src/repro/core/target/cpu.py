@@ -1,16 +1,41 @@
 """The jitted XLA target CPU model (the "FPGA" role).
 
-State is a NamedTuple of device arrays; :func:`run_chunk` is a compiled
-``while_loop`` that retires one instruction per non-stalled core per global
-tick (cores stepping in core-index order within a tick) until a core
-raises an exception, every core is parked, or the cycle budget runs out.
-When every live core is stalled on ``stall_until`` the loop fast-forwards
-time to the next wake-up in one step — channel-induced stalls cost no host
-work.
+State is a NamedTuple of device arrays stepped by a compiled
+``while_loop`` that retires one instruction per non-stalled core per
+global tick (cores stepping in core-index order within a tick) until a
+core raises an exception, every core is parked, or the cycle budget runs
+out.  When every live core is stalled on ``stall_until`` the loop
+fast-forwards time to the next wake-up in one step — channel-induced
+stalls cost no host work.
 
-Semantics are defined to be bit-identical to the pure-Python twin
-(:mod:`repro.core.target.pysim`); keep the two in lock-step.  The word-
-and page-granular helpers at the bottom are the device-side halves of the
+Two compiled interpreters share these semantics:
+
+  * :func:`run_chunk` — the reference loop: one scalar
+    :func:`_exec_one` per runnable core per tick.  On XLA:CPU its
+    per-core gather results feed several carried buffers at once, which
+    defeats in-place buffer assignment and costs a full copy of target
+    memory per retired instruction — it is kept as the conformance
+    baseline the fast path is measured against
+    (``benchmarks/target_speed.py``).
+  * :func:`run_chunk_fast` — the fast path: all cores execute one tick
+    as lane-vectorized math (:func:`_exec_substep`), a chunk-local
+    fetch-block cache skips the Sv39 fetch walk and instruction gather
+    for straight-line code, and ``issue_width`` ticks are retired per
+    loop iteration.  Same-tick memory dependencies between cores are
+    detected *before* any write lands and only the conflict-free prefix
+    of the core order is applied (the rest of the tick replays from
+    post-commit state), so multicore interleaving, LR/SC and
+    self-modifying code stay bit-identical to the reference.
+
+Semantics of both are defined to be bit-identical to the pure-Python
+twin (:mod:`repro.core.target.pysim`); keep the three in lock-step
+(``tests/test_cpu_differential.py`` fuzzes exactly this).  The decode/
+ALU/trap math in :func:`_exec_substep` deliberately duplicates
+:func:`_exec_one` rather than sharing helpers: the two compiled
+interpreters stay independent implementations, so a bug in one is
+caught by the differential harness against the other two instead of
+propagating to every JAX path at once.  The word- and
+page-granular helpers at the bottom are the device-side halves of the
 HTP data-access requests (``MemR/MemW/PageS/PageCP/PageR/PageW``).
 """
 from __future__ import annotations
@@ -26,6 +51,8 @@ import jax.numpy as jnp              # noqa: E402
 from jax import lax                  # noqa: E402
 
 from . import isa                    # noqa: E402
+from ...kernels.page_walk import ops as pw_ops   # noqa: E402
+from ...kernels.page_walk import ref as pw_ref   # noqa: E402
 
 CLOCK_HZ = 100_000_000
 
@@ -409,7 +436,13 @@ def run_chunk(st: CpuState, n_cores: int, mem_bytes: int,
 
         def do_exec(st):
             for c in range(nc):
-                runnable = ((st.priv[c] == 0) & ~st.pending[c] &
+                # not parked (priv != 3) — NOT priv == 0: PySim executes
+                # S-mode cores too, and `cond`/`active` already treat
+                # every non-parked core as live.  Gating on user mode
+                # here silently skipped restored S-mode cores while the
+                # tick clock kept advancing (see test_priv_gate_matches_
+                # pysim in tests/test_cpu_differential.py).
+                runnable = ((st.priv[c] != 3) & ~st.pending[c] &
                             (st.ticks >= st.stall_until[c]))
                 st = lax.cond(runnable,
                               lambda s: _exec_one(s, c, nc, mask),
@@ -426,6 +459,450 @@ def run_chunk(st: CpuState, n_cores: int, mem_bytes: int,
         return st, cycles + dc
 
     st, _ = lax.while_loop(cond, body, (st, _u(0)))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Fast-path interpreter: vectorized tick, fetch-block cache, batched issue
+# ---------------------------------------------------------------------------
+#: Sentinel word index for "reads nothing here" in the same-tick conflict
+#: read sets — outside any reachable physical word index.
+_NO_WORD = (1 << 64) - 1
+
+
+class FetchBlocks(NamedTuple):
+    """Per-core fetch-block cache: one translated, pre-gathered run of
+    consecutive instruction slots per core.  Strictly chunk-local — it is
+    rebuilt empty on every :func:`run_chunk_fast` call, so host-side
+    writes between chunks (redirect, sfence, satp/CSR writes, page loads,
+    snapshot restore) can never serve stale without any explicit
+    invalidation protocol.  Within a chunk, any committed store that
+    lands inside a cached range zeroes that block's ``nbytes``.
+
+    A guest store into the *page tables* that translated a block does
+    NOT invalidate it — the same delayed-shootdown envelope PySim's own
+    host-side TLB has (stale until an sfence, which only the host can
+    issue; the guest ISA carries no CSR/sfence instructions and the
+    runtime flushes after every PTE change it makes).  All three
+    interpreters already sit at different points in that envelope
+    (PySim caches across chunks, the scalar loop re-walks always), and
+    the bit-identity contract is defined over the flush discipline the
+    runtime enforces."""
+
+    vbase: jax.Array    # (nc,) u64 — virtual address of the first slot
+    pbase: jax.Array    # (nc,) u64 — its physical address
+    nbytes: jax.Array   # (nc,) u64 — valid bytes cached (0 = invalid)
+    insts: jax.Array    # (nc, block_words) u32 — raw instruction words
+
+
+def _empty_blocks(nc: int, block_words: int) -> FetchBlocks:
+    z = jnp.zeros((nc,), U64)
+    return FetchBlocks(z, z, z, jnp.zeros((nc, block_words), jnp.uint32))
+
+
+def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
+                  budget_left, nc: int, mask, block_words: int,
+                  block_cache: bool, walk_fetch):
+    """One fast-path substep: a whole global tick in the common case.
+
+    Mirrors :func:`_exec_one` lane-wise from the pre-substep state, then
+    checks whether core-index execution order could have produced a
+    different result: an earlier core committing a store into a later
+    core's read set (fetch word, PTE walk words, data word), into the
+    same word a later core also writes, or onto a line a later core
+    holds an LR reservation for.  Only the conflict-free *prefix* of the
+    core order is applied; ``exec_from`` (the first lane still owed this
+    tick's issue) is returned non-zero and the next substep re-executes
+    the deferred lanes from post-commit state — exactly the sequential
+    core-order result, with no branch anywhere near the memory buffer.
+    The tick counter advances only when a tick completes, and a tick
+    whose every live lane is stalled fast-forwards the clock to the next
+    wake-up (clamped to ``budget_left``) like the reference loop's skip
+    arm.
+
+    ``gate`` is the scalar "a new tick may start" predicate from the
+    batched-issue unroll; a partially-executed tick always finishes
+    regardless (matching PySim, where a trap raised mid-tick never stops
+    the later cores of that same tick).  Returns
+    ``(st, fb, exec_from', dcycles)``.
+
+    All lane math runs at ``L = max(nc, 2)`` lanes with any pad lane
+    permanently parked: XLA rewrites single-element gathers/scatters on
+    the memory image into dynamic-slice forms that later fuse into
+    unrelated consumers, which defeats in-place buffer assignment inside
+    the while loop and re-introduces the full-memory copy per tick this
+    interpreter exists to avoid.  Two lanes keep them real gather/scatter
+    ops, which stay materialized and alias in place.
+    """
+    mem = st.mem
+    L = max(nc, 2)
+    if L == nc:
+        pc, priv, pend, stall, satp, res = (st.pc, st.priv, st.pending,
+                                            st.stall_until, st.satp, st.res)
+        regs = st.regs
+    else:
+        def _pad(v, fill=0):
+            tail = jnp.full((L - nc,) + v.shape[1:], fill, v.dtype)
+            return jnp.concatenate([v, tail])
+        pc = _pad(st.pc)
+        priv = _pad(st.priv, 3)
+        pend = _pad(st.pending, True)
+        stall = _pad(st.stall_until)
+        satp = _pad(st.satp)
+        res = _pad(st.res, _RES_INVALID)
+        regs = _pad(st.regs)
+        fb = FetchBlocks(_pad(fb.vbase), _pad(fb.pbase), _pad(fb.nbytes),
+                         _pad(fb.insts))
+    lanes = jnp.arange(L)
+    active = priv != 3
+    runnable = active & ~pend & (st.ticks >= stall)
+    cont = exec_from > _u(0)
+    ok = cont | gate
+    cand = ok & runnable & (lanes.astype(U64) >= exec_from)
+
+    # ---- fetch: block cache hit / walk+fill on miss --------------------
+    if block_cache:
+        off = pc - fb.vbase
+        hit = cand & (off < fb.nbytes) & ((off & _u(3)) == 0)
+    else:
+        off = jnp.zeros((L,), U64)
+        hit = jnp.zeros((L,), bool)
+    miss = cand & ~hit
+
+    def do_walk(_):
+        return walk_fetch(mem, satp, pc)
+
+    def no_walk(_):
+        return (jnp.zeros((L,), U64), jnp.zeros((L,), bool),
+                jnp.full((L, 3), _u(_NO_WORD)),
+                jnp.zeros((L, block_words), jnp.uint32),
+                jnp.zeros((L,), U64))
+
+    wpa, wfault, wwords, winsts, wnb = lax.cond(jnp.any(miss), do_walk,
+                                                no_walk, None)
+    ipa = jnp.where(hit, fb.pbase + off, wpa)
+    ifault = miss & wfault
+    slot = ((off >> _u(2)) & _u(block_words - 1)).astype(jnp.int32)
+    inst_hit = jnp.take_along_axis(fb.insts, slot[:, None], axis=1)[:, 0]
+    inst = jnp.where(hit, inst_hit.astype(U64), winsts[:, 0].astype(U64))
+
+    if block_cache:
+        fill = miss & ~wfault
+        fb = FetchBlocks(
+            vbase=jnp.where(fill, pc, fb.vbase),
+            pbase=jnp.where(fill, wpa, fb.pbase),
+            nbytes=jnp.where(fill, wnb, fb.nbytes),
+            insts=jnp.where(fill[:, None], winsts, fb.insts))
+
+    # ---- decode (identical field math to _exec_one, lane-wise) ---------
+    op = inst & _u(0x7F)
+    rd = (inst >> _u(7)) & _u(0x1F)
+    f3 = (inst >> _u(12)) & _u(7)
+    rs1 = (inst >> _u(15)) & _u(0x1F)
+    rs2 = (inst >> _u(20)) & _u(0x1F)
+    f7 = inst >> _u(25)
+    imm_i = _sx(inst >> _u(20), 12)
+    imm_s = _sx(((inst >> _u(25)) << _u(5)) | rd, 12)
+    imm_b = _sx((((inst >> _u(8)) & _u(0xF)) << _u(1)) |
+                (((inst >> _u(25)) & _u(0x3F)) << _u(5)) |
+                (((inst >> _u(7)) & _u(1)) << _u(11)) |
+                ((inst >> _u(31)) << _u(12)), 13)
+    imm_u = _sx(inst & _u(0xFFFFF000), 32)
+    imm_j = _sx((((inst >> _u(21)) & _u(0x3FF)) << _u(1)) |
+                (((inst >> _u(20)) & _u(1)) << _u(11)) |
+                (((inst >> _u(12)) & _u(0xFF)) << _u(12)) |
+                ((inst >> _u(31)) << _u(20)), 21)
+
+    a = jnp.take_along_axis(regs, rs1.astype(jnp.int32)[:, None],
+                            axis=1)[:, 0]
+    b = jnp.take_along_axis(regs, rs2.astype(jnp.int32)[:, None],
+                            axis=1)[:, 0]
+
+    is_load = op == _u(isa.OP_LOAD)
+    is_fence = op == _u(isa.OP_MISC_MEM)
+    is_opimm = op == _u(isa.OP_IMM)
+    is_auipc = op == _u(isa.OP_AUIPC)
+    is_opimm32 = op == _u(isa.OP_IMM_32)
+    is_store = op == _u(isa.OP_STORE)
+    is_amo = op == _u(isa.OP_AMO)
+    is_op = op == _u(isa.OP_OP)
+    is_lui = op == _u(isa.OP_LUI)
+    is_op32 = op == _u(isa.OP_OP_32)
+    is_branch = op == _u(isa.OP_BRANCH)
+    is_jalr = op == _u(isa.OP_JALR)
+    is_jal = op == _u(isa.OP_JAL)
+    is_system = op == _u(isa.OP_SYSTEM)
+    is_ecall = is_system & (inst == _u(isa.INST_ECALL))
+    is_ebreak = is_system & (inst == _u(isa.INST_EBREAK))
+    illegal = ~(is_load | is_fence | is_opimm | is_auipc | is_opimm32 |
+                is_store | is_amo | is_op | is_lui | is_op32 | is_branch |
+                is_jalr | is_jal | is_ecall | is_ebreak)
+
+    # ---- ALU ----------------------------------------------------------
+    reg_form = is_op | is_op32
+    bop = jnp.where(reg_form, b, imm_i)
+    is_m = reg_form & (f7 == _u(1))
+    is_sub = reg_form & (f7 == _u(0x20)) & (f3 == _u(0))
+    is_sra = jnp.where(reg_form, f7 == _u(0x20),
+                       (inst >> _u(30)) & _u(1) != 0) & (f3 == _u(5))
+    alu_w = _alu64(f3, is_sub, is_sra, is_m, a, bop)
+    alu_w32 = _alu32(f3, is_sub, is_sra, is_m, a, bop)
+
+    # ---- data memory access -------------------------------------------
+    funct5 = f7 >> _u(2)
+    is_lr = is_amo & (funct5 == _u(isa.AMO_LR))
+    is_sc = is_amo & (funct5 == _u(isa.AMO_SC))
+    dva = jnp.where(is_amo, a,
+                    a + jnp.where(is_store, imm_s, imm_i))
+    is_memop = is_load | is_store | is_amo
+    want_w = is_store | (is_amo & ~is_lr)
+    dpa, dfault, dwords = pw_ops.sv39_walk(
+        mem, satp, dva, want_w, jnp.zeros((L,), bool), mask)
+    szb = jnp.where(is_amo,
+                    jnp.where(f3 == _u(2), _u(4), _u(8)),
+                    _u(1) << (f3 & _u(3)))
+    misal = is_memop & ((dva & (szb - _u(1))) != 0)
+
+    dword = mem[dpa >> _u(3)]
+    dshift = (dpa & _u(7)) << _u(3)
+    raw = dword >> dshift
+    sizemask = jnp.select([szb == _u(1), szb == _u(2), szb == _u(4)],
+                          [_u(0xFF), _u(0xFFFF), _u(0xFFFFFFFF)],
+                          _u(_RES_INVALID))
+    rawv = raw & sizemask
+    uns = (f3 & _u(4)) != 0
+    loaded = jnp.select(
+        [szb == _u(1), szb == _u(2), szb == _u(4)],
+        [jnp.where(uns, rawv, _sx(rawv, 8)),
+         jnp.where(uns, rawv, _sx(rawv, 16)),
+         jnp.where(uns, rawv, _sx(rawv, 32))],
+        rawv)
+
+    # ---- AMO ----------------------------------------------------------
+    amo_w = f3 == _u(2)
+    amo_old = rawv
+    amo_b = b & sizemask
+    s_old = jnp.where(amo_w, _sx(amo_old, 32), amo_old).astype(I64)
+    s_b = jnp.where(amo_w, _sx(amo_b, 32), amo_b).astype(I64)
+    amo_new = jnp.select(
+        [funct5 == _u(isa.AMO_SWAP), funct5 == _u(isa.AMO_ADD),
+         funct5 == _u(isa.AMO_XOR), funct5 == _u(isa.AMO_AND),
+         funct5 == _u(isa.AMO_OR), funct5 == _u(isa.AMO_MIN),
+         funct5 == _u(isa.AMO_MAX), funct5 == _u(isa.AMO_MINU)],
+        [amo_b, amo_old + amo_b, amo_old ^ amo_b, amo_old & amo_b,
+         amo_old | amo_b,
+         jnp.where(s_old < s_b, amo_old, amo_b),
+         jnp.where(s_old > s_b, amo_old, amo_b),
+         jnp.where(amo_old < amo_b, amo_old, amo_b)],
+        jnp.where(amo_old > amo_b, amo_old, amo_b))
+    sc_ok = is_sc & (res == dpa)
+    amo_rdval = jnp.where(
+        is_sc, jnp.where(sc_ok, _u(0), _u(1)),
+        jnp.where(amo_w, _sx(amo_old, 32), amo_old))
+
+    # ---- traps --------------------------------------------------------
+    ma_cause = jnp.where(is_load | is_lr, _u(4), _u(6))
+    pf_cause = jnp.where(want_w, _u(15), _u(13))
+    dtrap = is_memop & (misal | dfault)
+    traps = ifault | illegal | is_ecall | is_ebreak | dtrap
+    cause = jnp.where(
+        ifault, _u(12),
+        jnp.where(illegal, _u(2),
+                  jnp.where(is_ecall, _u(8),
+                            jnp.where(is_ebreak, _u(3),
+                                      jnp.where(misal, ma_cause,
+                                                pf_cause)))))
+    tval = jnp.where(
+        ifault, pc,
+        jnp.where(illegal, inst,
+                  jnp.where(is_ecall | is_ebreak, _u(0), dva)))
+
+    commit = cand & ~traps & (is_store |
+                              (is_amo & ~is_lr & (~is_sc | sc_ok)))
+    stw = dpa >> _u(3)
+
+    # ---- same-tick conflict detection ---------------------------------
+    # Read set of lane j: the executed instruction word (cache hits read
+    # it through fb content, which is kept equal to memory), the PTE
+    # words its walks touched, and its data word.  Order matters: only a
+    # store by an EARLIER core (i < j) can change what core j would have
+    # observed under sequential core-order execution, so the applied set
+    # is the prefix of the core order up to the first lane whose inputs
+    # an earlier commit may have touched; the rest re-run next substep.
+    no_w = _u(_NO_WORD)
+    reads = jnp.concatenate([
+        jnp.where(cand, ipa >> _u(3), no_w)[:, None],
+        jnp.where(cand & is_memop, stw, no_w)[:, None],
+        jnp.where(miss[:, None], wwords, no_w),
+        jnp.where((cand & is_memop)[:, None], dwords, no_w),
+    ], axis=1)                                             # (L, 8)
+    res_word = jnp.where(cand & (res != _u(_RES_INVALID)),
+                         res >> _u(3), no_w)
+    earlier = lanes[:, None] < lanes[None, :]              # i executes first
+    wr = commit[:, None] & earlier                         # (i, j)
+    read_hit = jnp.any(stw[:, None, None] == reads[None, :, :], axis=-1)
+    st_hit = commit[None, :] & (stw[:, None] == stw[None, :])
+    res_hit = stw[:, None] == res_word[None, :]
+    conf = jnp.any(wr & (read_hit | st_hit | res_hit), axis=0)   # per j
+    safe = cand & (jnp.cumsum(conf.astype(jnp.int32)) == 0)
+    deferred = cand & ~safe
+
+    tr = safe & traps
+    ret = safe & ~traps
+    commit = commit & safe
+
+    # ---- memory commit -------------------------------------------------
+    sval = jnp.where(is_store | is_sc, b, amo_new)
+    wmask = sizemask << dshift
+    new_word = (dword & ~wmask) | ((sval << dshift) & wmask)
+    widx = jnp.where(commit, stw, _u(mem.shape[0]))        # OOB -> dropped
+    new_mem = mem.at[widx].set(new_word, mode="drop")
+
+    # ---- reservations ---------------------------------------------------
+    # Own update first (LR acquires, SC always clears), then invalidation
+    # by any other core's commit to the same line.  An earlier store onto
+    # a line a later core LRs in the same tick is unreachable here — the
+    # LR's data read defers that lane to the next substep — so the
+    # unordered form below is exact (see also the SC guard via
+    # ``res_word`` above).
+    own = jnp.where(ret & is_lr, dpa,
+                    jnp.where(ret & is_sc, _u(_RES_INVALID), res))
+    inv = jnp.any(commit[:, None] & (lanes[:, None] != lanes[None, :]) &
+                  (stw[:, None] == (own >> _u(3))[None, :]), axis=0)
+    new_res = jnp.where(inv, _u(_RES_INVALID), own)
+
+    # ---- next pc / register writeback ----------------------------------
+    sa = a.astype(I64)
+    sb64 = b.astype(I64)
+    taken = is_branch & jnp.select(
+        [f3 == _u(0), f3 == _u(1), f3 == _u(4), f3 == _u(5), f3 == _u(6)],
+        [a == b, a != b, sa < sb64, sa >= sb64, a < b],
+        a >= b)
+    next_pc = pc + _u(4)
+    next_pc = jnp.where(taken, pc + imm_b, next_pc)
+    next_pc = jnp.where(is_jal, pc + imm_j, next_pc)
+    next_pc = jnp.where(is_jalr, (a + imm_i) & ~_u(1), next_pc)
+
+    wval = jnp.where(is_opimm | is_op, alu_w, _u(0))
+    wval = jnp.where(is_opimm32 | is_op32, alu_w32, wval)
+    wval = jnp.where(is_load, loaded, wval)
+    wval = jnp.where(is_lui, imm_u, wval)
+    wval = jnp.where(is_auipc, pc + imm_u, wval)
+    wval = jnp.where(is_jal | is_jalr, pc + _u(4), wval)
+    wval = jnp.where(is_amo, amo_rdval, wval)
+    wen = ret & (is_opimm | is_op | is_opimm32 | is_op32 | is_load |
+                 is_lui | is_auipc | is_jal | is_jalr | is_amo) & (rd != 0)
+    cols = jnp.arange(32, dtype=U64)[None, :] == rd[:, None]
+    new_regs = jnp.where(wen[:, None] & cols, wval[:, None], regs)
+
+    if block_cache:
+        # content coherence: a committed store into any cached range
+        # (including a block filled this very tick) kills that block
+        stb = stw << _u(3)
+        over = (commit[:, None] & (stb[:, None] + _u(8) > fb.pbase[None, :])
+                & (stb[:, None] < (fb.pbase + fb.nbytes)[None, :]))
+        fb = fb._replace(nbytes=jnp.where(jnp.any(over, axis=0), _u(0),
+                                          fb.nbytes))
+
+    # ---- tick bookkeeping ----------------------------------------------
+    # The tick completes when no candidate lane was deferred; a fresh
+    # tick whose every live lane is stalled fast-forwards the clock to
+    # the next wake-up instead (the reference loop's skip arm).
+    started = jnp.any(cand) | cont
+    tick_done = started & ~jnp.any(deferred)
+    skip = gate & ~cont & ~jnp.any(runnable) & jnp.any(active)
+    gaps = jnp.where(active, stall - st.ticks, _u(_RES_INVALID))
+    gap = jnp.minimum(jnp.min(gaps), budget_left)
+    dticks = jnp.where(tick_done, _u(1), jnp.where(skip, gap, _u(0)))
+    new_from = jnp.where(jnp.any(deferred),
+                         jnp.argmax(deferred).astype(U64), _u(0))
+    retired = ret.astype(U64)
+
+    def cut(v):
+        return v if L == nc else v[:nc]
+    st = st._replace(
+        regs=cut(new_regs),
+        pc=cut(jnp.where(ret, next_pc, pc)),
+        pending=st.pending | cut(tr),
+        mcause=jnp.where(cut(tr), cut(cause), st.mcause),
+        mepc=jnp.where(cut(tr), cut(pc), st.mepc),
+        mtval=jnp.where(cut(tr), cut(tval), st.mtval),
+        res=cut(new_res),
+        mem=new_mem,
+        ticks=st.ticks + dticks,
+        uticks=st.uticks + cut(retired),
+        instret=st.instret + cut(retired),
+    )
+    if L != nc:
+        fb = FetchBlocks(fb.vbase[:nc], fb.pbase[:nc], fb.nbytes[:nc],
+                         fb.insts[:nc])
+    return st, fb, new_from, dticks
+
+
+@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7), donate_argnums=(0,))
+def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
+                   issue_width: int = 8, block_words: int = 16,
+                   block_cache: bool = True,
+                   fetch_kernel: str = "ref") -> CpuState:
+    """Fast-path twin of :func:`run_chunk`: identical architectural
+    semantics, up to ``issue_width`` vectorized ticks per loop iteration.
+
+    ``block_words`` (a power of two) sizes the per-core fetch block;
+    ``block_cache=False`` keeps the batched vector issue but re-walks the
+    fetch for every instruction.  ``fetch_kernel`` picks the translate/
+    fetch-gather backend for block fills: ``"ref"`` (pure-jnp oracle,
+    the CPU default) or ``"pallas"`` (the interpret-capable Pallas
+    kernel, native on TPU).
+    """
+    assert block_words & (block_words - 1) == 0, "block_words must be pow2"
+    nc = n_cores
+    mask = _u(mem_bytes - 1)
+    limit = jnp.asarray(max_cycles, U64)
+
+    if fetch_kernel == "pallas":
+        interpret = jax.default_backend() != "tpu"
+
+        def walk_fetch(mem, satp, va):
+            return pw_ops.walk_fetch_block(mem, satp, va, mem_bytes - 1,
+                                           block_words,
+                                           interpret=interpret)
+    else:
+        # "ref" must be honourable on every backend (the Pallas kernel's
+        # u64 image needs an x64 story real TPUs lack), so bypass the
+        # backend-dispatching ops layer entirely
+        def walk_fetch(mem, satp, va):
+            return pw_ref.walk_fetch_block_ref(mem, satp, va, mask,
+                                               block_words)
+
+    # No lax.cond anywhere near the carry: on XLA:CPU a conditional whose
+    # operands include the memory image costs a full copy of it per
+    # execution, which is the exact pathology this path removes.  Stall
+    # fast-forward and conflict serialization are folded into the substep
+    # as masked math instead; `exec_from` in the carry marks a tick whose
+    # core-order suffix is still owed (it must finish even once a trap is
+    # pending, exactly like the reference tick).
+    def cond(carry):
+        st, cycles, exec_from, fb = carry
+        return (((cycles < limit) & ~jnp.any(st.pending) &
+                 jnp.any(st.priv != 3)) | (exec_from > _u(0)))
+
+    def body(carry):
+        def issue(_, carry):
+            st, cycles, exec_from, fb = carry
+            gate = ~jnp.any(st.pending) & (cycles < limit)
+            st, fb, exec_from, d = _exec_substep(
+                st, fb, exec_from, gate, limit - cycles, nc, mask,
+                block_words, block_cache, walk_fetch)
+            return st, cycles + d, exec_from, fb
+
+        # fori_loop: the substep traces once, runs issue_width times — a
+        # python unroll multiplies compile time by issue_width for no
+        # measurable run-time win (loop overhead is tens of ns against a
+        # multi-microsecond body)
+        return lax.fori_loop(0, issue_width, issue, carry)
+
+    carry = (st, _u(0), _u(0), _empty_blocks(nc, block_words))
+    st, _, _, _ = lax.while_loop(cond, body, carry)
     return st
 
 

@@ -1,0 +1,31 @@
+"""Jit'd wrappers choosing the Pallas kernel on TPU, jnp reference on CPU.
+
+Same dispatch contract as the other kernel packages: ``interpret=True``
+forces the Pallas path through the interpreter (CPU tests and the
+``fetch_kernel="pallas"`` target config), otherwise the kernel only runs
+on a real TPU backend and CPU hosts use the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import page_walk as K
+from . import ref as R
+
+
+def _use_kernel(interpret):
+    return interpret or jax.default_backend() == "tpu"
+
+
+def sv39_walk(mem, satp, va, want_write, want_exec, mask):
+    """Data-side walk: always the vectorized oracle — it is pure gather
+    math the fast-path interpreter fuses into its tick, with no block
+    DMA to win back on an accelerator."""
+    return R.sv39_walk_ref(mem, satp, va, want_write, want_exec, mask)
+
+
+def walk_fetch_block(mem, satp, va, mask, block_words, interpret=False):
+    if _use_kernel(interpret):
+        return K.walk_fetch_block(mem, satp, va, mask, block_words,
+                                  interpret=interpret)
+    return R.walk_fetch_block_ref(mem, satp, va, mask, block_words)

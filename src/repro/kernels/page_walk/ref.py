@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the Sv39 page-walk + fetch-block gather chain.
+
+This is the lane-vectorized twin of the scalar walk in
+:func:`repro.core.target.cpu._translate`: every input is a ``(L,)`` lane
+vector (one lane per core), every PTE load is one XLA gather across all
+lanes, and the walk additionally reports *which* memory words it read —
+the fast-path interpreter folds those into its same-tick store-conflict
+read set.  The Pallas kernel in :mod:`repro.kernels.page_walk.page_walk`
+implements the identical chain as explicit HBM->VMEM DMAs; this module is
+its oracle and the default backend on CPU hosts.
+
+Semantics must stay bit-identical to both targets: mode-8 ``satp``
+selects the three-level Sv39 walk (leaves allowed at any level, U-bit
+plus R/W/X permission check, fault on invalid or non-permitted), any
+other mode is Bare (identity translation under the memory mask).
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 PTEs/addresses
+
+import jax.numpy as jnp                    # noqa: E402
+
+from repro.core.target import isa          # noqa: E402
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+#: Sentinel word index for "this walk level read nothing" — outside any
+#: reachable physical word index, so it never collides with a store.
+NO_WORD = (1 << 64) - 1
+
+
+def _u(x):
+    return jnp.uint64(x)
+
+
+def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask):
+    """Vectorized Sv39 walk; lanes are independent cores.
+
+    ``mem`` is the ``(mem_bytes // 8,)`` u64 word array; ``satp``/``va``/
+    ``want_write``/``want_exec`` are ``(L,)`` lanes.  Returns
+    ``(pa, fault, walk_words)`` where ``walk_words`` is ``(L, 3)`` u64 —
+    the word index each level's PTE load touched, :data:`NO_WORD` for
+    levels the walk never reached and for Bare lanes.
+    """
+    bare = (satp >> _u(60)) != _u(8)
+    need = _u(isa.PTE_U) | jnp.where(
+        want_exec, _u(isa.PTE_X),
+        jnp.where(want_write, _u(isa.PTE_W), _u(isa.PTE_R)))
+    a = (satp & _u((1 << 44) - 1)) << _u(12)
+    done = jnp.zeros(va.shape, bool)
+    fault = jnp.zeros(va.shape, bool)
+    pa = jnp.zeros(va.shape, U64)
+    walk_words = []
+    for level in (2, 1, 0):
+        idx = (va >> _u(12 + 9 * level)) & _u(0x1FF)
+        widx = ((a + idx * _u(8)) & mask) >> _u(3)
+        pte = mem[widx]
+        valid = (pte & _u(isa.PTE_V)) != 0
+        leaf = valid & ((pte & _u(isa.PTE_R | isa.PTE_X)) != 0)
+        perm_ok = (pte & need) == need
+        off_mask = _u((1 << (12 + 9 * level)) - 1)
+        leaf_pa = (((pte >> _u(10)) << _u(12)) | (va & off_mask)) & mask
+        take = ~done
+        walk_words.append(jnp.where(take & ~bare, widx, _u(NO_WORD)))
+        fault = fault | (take & (~valid | (leaf & ~perm_ok)))
+        pa = jnp.where(take & leaf & perm_ok, leaf_pa, pa)
+        done = done | (take & (~valid | leaf))
+        a = jnp.where(take & valid & ~leaf, (pte >> _u(10)) << _u(12), a)
+    fault = (fault | ~done) & ~bare
+    pa = jnp.where(bare, va, pa) & mask
+    return pa, fault, jnp.stack(walk_words, axis=-1)
+
+
+def walk_fetch_block_ref(mem, satp, va, mask, block_words):
+    """Execute-translate ``va`` and gather a fetch block behind it.
+
+    The block is ``block_words`` consecutive 32-bit instruction slots
+    starting at ``va``, clamped to the enclosing 4 KiB page (the walk
+    only proves contiguity within one page; Bare lanes keep the same
+    bound for uniformity).  Returns ``(pa, fault, walk_words, insts,
+    nbytes)`` with ``insts`` ``(L, block_words)`` u32 and ``nbytes`` the
+    per-lane valid byte count (0 on fault).
+    """
+    f = jnp.zeros(va.shape, bool)
+    pa, fault, walk_words = sv39_walk_ref(mem, satp, va, f, ~f, mask)
+    remain = _u(0x1000) - (va & _u(0xFFF))
+    nbytes = jnp.where(fault, _u(0),
+                       jnp.minimum(remain, _u(4 * block_words)))
+    offs = jnp.arange(block_words, dtype=U64) * _u(4)
+    addr = pa[..., None] + offs
+    word = mem[(addr & mask) >> _u(3)]
+    insts = ((word >> (((addr >> _u(2)) & _u(1)) * _u(32))) &
+             _u(0xFFFFFFFF)).astype(U32)
+    return pa, fault, walk_words, insts, nbytes

@@ -1,5 +1,21 @@
 """The jitted XLA target must be bit-identical to the pure-Python target
-under paging + atomics + multicore interleaving."""
+under paging + atomics + multicore interleaving.
+
+Two layers pin this:
+
+  * the fixed directed program below (atomics + MMU + byte/half traffic),
+  * a seeded RV64IMA program *fuzzer* that runs PySim and JaxTarget in
+    lockstep chunks and compares the full architectural state (regs,
+    CSRs, counters, the entire memory image) after every chunk —
+    parametrized over the fast-path interpreter's axes (fast on/off,
+    fetch-block cache on/off).
+
+The fuzz sweep is seed-count-scalable: ``FASE_FUZZ_SEEDS=68`` (>= 200
+generated programs across the parameter grid) is the non-quick
+conformance run; the default keeps tier-1 time bounded.
+"""
+import os
+
 import numpy as np
 import pytest
 
@@ -90,3 +106,296 @@ def test_differential(nc):
         assert jt.get_instret(c) == ps.get_instret(c)
     sym = img.symbols["counter"]
     assert jt.mem_read_word(sym) == ps.mem_read_word(sym)
+
+
+def test_differential_pallas_fetch_kernel():
+    """The Pallas translate/fetch block-fill backend (interpret mode on
+    CPU) must stay bit-identical too — same directed program, nc=1."""
+    img = asm.assemble(SRC)
+    jt = JaxTarget(1, 1 << 21, fetch_kernel="pallas")
+    ps = PySim(1, 1 << 21)
+    load(jt, img, 1)
+    load(ps, img, 1)
+    for t in (jt, ps):
+        while not t.pending_cores():
+            t.run(max_cycles=2000)
+    for r in range(32):
+        assert jt.reg_read(0, r) == ps.reg_read(0, r), r
+    assert jt.get_ticks() == ps.get_ticks()
+    assert jt.get_instret(0) == ps.get_instret(0)
+
+
+# ---------------------------------------------------------------------------
+# seeded RV64IMA program fuzzer (lockstep differential)
+# ---------------------------------------------------------------------------
+MEM = 1 << 21
+FUZZ_SEEDS = int(os.environ.get("FASE_FUZZ_SEEDS", "4"))
+
+#: JaxTarget configurations the fuzzer sweeps: the fast path with and
+#: without the fetch-block cache, and the scalar reference loop.
+TARGET_CONFIGS = [
+    pytest.param(dict(fast_path=True, block_cache=True), id="fast"),
+    pytest.param(dict(fast_path=True, block_cache=False), id="fast-nocache"),
+    pytest.param(dict(fast_path=False), id="slow"),
+]
+
+ALU_RR = ["add", "sub", "sll", "srl", "sra", "slt", "sltu", "xor", "or",
+          "and", "mul", "mulh", "mulhu", "mulhsu", "div", "divu", "rem",
+          "remu", "addw", "subw", "sllw", "srlw", "sraw", "mulw", "divw",
+          "divuw", "remw", "remuw"]
+ALU_RI = ["addi", "slti", "sltiu", "xori", "ori", "andi", "addiw"]
+SHIFTS = [("slli", 63), ("srli", 63), ("srai", 63), ("slliw", 31),
+          ("srliw", 31), ("sraiw", 31)]
+LOADS = {"lb": 1, "lbu": 1, "lh": 2, "lhu": 2, "lw": 4, "lwu": 4, "ld": 8}
+STORES = {"sb": 1, "sh": 2, "sw": 4, "sd": 8}
+AMOS = ["amoswap", "amoadd", "amoxor", "amoand", "amoor", "amomin",
+        "amomax", "amominu", "amomaxu"]
+BRANCHES = ["beq", "bne", "blt", "bge", "bltu", "bgeu"]
+GPRS = ["t0", "t1", "t2", "t3", "t4", "t5", "t6",
+        "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5"]
+EDGE_VALS = [0, 1, -1, 2, -2, 63, 64, (1 << 63) - 1, -(1 << 63),
+             0x8000_0000, 0x7FFF_FFFF, 0xFFFF_FFFF, 0x1_0000_0000]
+
+
+class _ProgGen:
+    """Seeded RV64IMA program generator.
+
+    Emits structurally terminating programs: straight-line ALU runs,
+    width-mixed loads/stores into a per-core private region, AMO/LR/SC
+    traffic on a *shared* region (same-tick multicore conflicts — the
+    fast path's prefix-serialization case), forward branches and bounded
+    counted loops.  ``a0`` arrives holding the core id.
+    """
+
+    def __init__(self, seed: int):
+        self.rng = np.random.RandomState(seed)
+        self.lines = ["_start:"]
+        self.label = 10
+
+    def r(self):
+        return GPRS[self.rng.randint(len(GPRS))]
+
+    def val(self):
+        if self.rng.rand() < 0.4:
+            return int(EDGE_VALS[self.rng.randint(len(EDGE_VALS))])
+        return int(self.rng.randint(0, 1 << 63))
+
+    def emit(self, line):
+        self.lines.append("    " + line)
+
+    def alu_run(self):
+        for _ in range(self.rng.randint(1, 6)):
+            k = self.rng.rand()
+            if k < 0.5:
+                self.emit(f"{ALU_RR[self.rng.randint(len(ALU_RR))]} "
+                          f"{self.r()}, {self.r()}, {self.r()}")
+            elif k < 0.8:
+                imm = int(self.rng.randint(-2048, 2048))
+                self.emit(f"{ALU_RI[self.rng.randint(len(ALU_RI))]} "
+                          f"{self.r()}, {self.r()}, {imm}")
+            else:
+                op, mx = SHIFTS[self.rng.randint(len(SHIFTS))]
+                self.emit(f"{op} {self.r()}, {self.r()}, "
+                          f"{self.rng.randint(0, mx + 1)}")
+
+    def mem_run(self):
+        for _ in range(self.rng.randint(1, 4)):
+            if self.rng.rand() < 0.5:
+                op, sz = list(STORES.items())[self.rng.randint(4)]
+                off = int(self.rng.randint(0, 256 // sz)) * sz
+                self.emit(f"{op} {self.r()}, {off}(s0)")
+            else:
+                op, sz = list(LOADS.items())[self.rng.randint(7)]
+                off = int(self.rng.randint(0, 256 // sz)) * sz
+                self.emit(f"{op} {self.r()}, {off}(s0)")
+
+    def atomic_run(self):
+        w = ".d" if self.rng.rand() < 0.5 else ".w"
+        sz = 8 if w == ".d" else 4
+        off = int(self.rng.randint(0, 4)) * sz
+        if off:
+            self.emit(f"addi s8, s1, {off}")
+        else:
+            self.emit("mv s8, s1")
+        if self.rng.rand() < 0.4:
+            # LR/SC increment; success depends on same-tick neighbours
+            self.emit(f"lr{w} {self.r()}, (s8)")
+            self.emit("addi t0, t0, 1")
+            self.emit(f"sc{w} {self.r()}, t0, (s8)")
+        else:
+            amo = AMOS[self.rng.randint(len(AMOS))]
+            self.emit(f"{amo}{w} {self.r()}, {self.r()}, (s8)")
+
+    def branch_skip(self):
+        lbl = self.label
+        self.label += 1
+        br = BRANCHES[self.rng.randint(len(BRANCHES))]
+        self.emit(f"{br} {self.r()}, {self.r()}, {lbl}f")
+        self.alu_run()
+        self.lines.append(f"{lbl}:")
+
+    def loop(self):
+        lbl = self.label
+        self.label += 1
+        cnt = self.rng.randint(2, 7)
+        self.emit(f"li s9, {cnt}")
+        self.lines.append(f"{lbl}:")
+        self.alu_run()
+        if self.rng.rand() < 0.6:
+            self.mem_run()
+        if self.rng.rand() < 0.4:
+            self.atomic_run()
+        self.emit("addi s9, s9, -1")
+        self.emit(f"bnez s9, {lbl}b")
+
+    def build(self) -> str:
+        e = self.emit
+        # per-core private region + shared atomic cell
+        e("la s0, private")
+        e("slli s10, a0, 8")            # 256 B per core
+        e("add s0, s0, s10")
+        e("la s1, shared")
+        for reg in GPRS[:10]:
+            e(f"li {reg}, {self.val()}")
+        blocks = [self.alu_run, self.mem_run, self.atomic_run,
+                  self.branch_skip, self.loop]
+        for _ in range(self.rng.randint(8, 16)):
+            blocks[self.rng.randint(len(blocks))]()
+        e("li a7, 93")
+        e("ecall")
+        self.lines.append(".data")
+        self.lines.append("shared: .zero 64")
+        self.lines.append("private: .zero 2048")
+        return "\n".join(self.lines)
+
+
+def _norm(v):
+    return v & ((1 << 64) - 1)
+
+
+def assert_same_state(jt, ps, ctx):
+    nc = ps.n_cores
+    assert jt.get_ticks() == ps.get_ticks(), ctx
+    assert jt.pending_cores() == ps.pending_cores(), ctx
+    for c in range(nc):
+        for r in range(32):
+            assert jt.reg_read(c, r) == ps.reg_read(c, r), (ctx, c, r)
+        for csr in ("pc", "priv", "satp", "mcause", "mepc", "mtval",
+                    "stall_until", "res"):
+            assert _norm(jt.csr_read(c, csr)) == _norm(ps.csr_read(c, csr)), \
+                (ctx, c, csr)
+        assert jt.get_uticks(c) == ps.get_uticks(c), (ctx, c)
+        assert jt.get_instret(c) == ps.get_instret(c), (ctx, c)
+    jmem = np.asarray(jt.st.mem)
+    pmem = np.frombuffer(bytes(ps.mem), dtype=np.uint64)
+    diff = np.nonzero(jmem != pmem)[0]
+    assert diff.size == 0, (ctx, [(hex(int(i) * 8)) for i in diff[:8]])
+
+
+def run_lockstep(src, nc, jt_kwargs, mmu, chunk=379, max_chunks=400):
+    """Run the same image on both targets in lockstep ``chunk``-cycle
+    slices, comparing the full architectural state after every slice;
+    trapped cores are parked on both sides (end of that hart)."""
+    img = asm.assemble(src)
+    jt = JaxTarget(nc, MEM, **jt_kwargs)
+    ps = PySim(nc, MEM)
+    for t in (jt, ps):
+        for seg in img.segments:
+            data = bytes(seg.data)
+            n = (len(data) + 7) // 8
+            words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+            for i, w in enumerate(words):
+                t.mem_write_word(seg.vaddr + 8 * i, int(w))
+        if mmu:
+            build_tables(t)
+        for c in range(nc):
+            t.reg_write(c, 10, c)
+            t.redirect(c, img.entry)
+    for step in range(max_chunks):
+        jt.run(max_cycles=chunk)
+        ps.run(max_cycles=chunk)
+        assert_same_state(jt, ps, f"chunk {step}")
+        for t in (jt, ps):
+            for c in t.pending_cores():
+                t.clear_pending(c)
+                t.park(c)
+        if all(ps.priv[c] == 3 for c in range(nc)):
+            return
+    raise AssertionError("program did not finish within the chunk budget")
+
+
+@pytest.mark.parametrize("jt_kwargs", TARGET_CONFIGS)
+@pytest.mark.parametrize("seed", range(FUZZ_SEEDS))
+def test_fuzz_differential(seed, jt_kwargs):
+    nc = (1, 2, 4)[seed % 3]
+    mmu = seed % 3 != 1
+    src = _ProgGen(seed).build()
+    run_lockstep(src, nc, jt_kwargs, mmu)
+
+
+# ---------------------------------------------------------------------------
+# directed regressions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("jt_kwargs", TARGET_CONFIGS)
+def test_priv_gate_matches_pysim(jt_kwargs):
+    """An S-mode (priv=1) core must execute, exactly like PySim.  The
+    pre-fix ``do_exec`` gated on ``priv == 0`` while ``cond`` used
+    ``priv != 3``: a restored S-mode core spun the tick clock without
+    retiring anything."""
+    src = """
+_start:
+    addi t0, t0, 5
+    addi t0, t0, 7
+    mul t1, t0, t0
+    li a7, 93
+    ecall
+"""
+    img = asm.assemble(src)
+    jt = JaxTarget(1, MEM, **jt_kwargs)
+    ps = PySim(1, MEM)
+    for t in (jt, ps):
+        for seg in img.segments:
+            data = bytes(seg.data)
+            n = (len(data) + 7) // 8
+            words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+            for i, w in enumerate(words):
+                t.mem_write_word(seg.vaddr + 8 * i, int(w))
+        t.redirect(0, img.entry)
+        t.csr_write(0, "priv", 1)          # supervisor, not parked
+        t.run(max_cycles=64)
+    assert ps.pending[0], "PySim must reach the ecall"
+    assert ps.get_instret(0) == 4          # the S-mode core really ran
+    assert_same_state(jt, ps, "priv=1")
+
+
+@pytest.mark.parametrize("jt_kwargs", TARGET_CONFIGS)
+def test_self_modifying_code_invalidates_fetch_blocks(jt_kwargs):
+    """A store into the instruction stream just ahead of execution must
+    be fetched back, not replayed from a stale fetch block."""
+    patched = isa.enc_i(isa.OP_IMM, isa.reg_num("t1"), 0,
+                        isa.reg_num("t1"), 77)     # addi t1, t1, 77
+    src = f"""
+_start:
+    la s0, site
+    li t0, {patched}
+    sw t0, 0(s0)
+    nop
+site:
+    nop
+    li a7, 93
+    ecall
+"""
+    img = asm.assemble(src)
+    jt = JaxTarget(1, MEM, **jt_kwargs)
+    ps = PySim(1, MEM)
+    for t in (jt, ps):
+        for seg in img.segments:
+            data = bytes(seg.data)
+            n = (len(data) + 7) // 8
+            words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+            for i, w in enumerate(words):
+                t.mem_write_word(seg.vaddr + 8 * i, int(w))
+        t.redirect(0, img.entry)
+        t.run(max_cycles=64)
+    assert ps.reg_read(0, isa.reg_num("t1")) == 77
+    assert_same_state(jt, ps, "smc")

@@ -15,6 +15,9 @@ from repro.kernels.paged_attention.paged_attention import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.page_ops import page_ops as PK
 from repro.kernels.page_ops import ref as PR
+from repro.kernels.page_walk import page_walk as WK
+from repro.kernels.page_walk import ref as WR
+from repro.core.target import isa
 
 
 @pytest.mark.parametrize("shape,dtype", [
@@ -91,3 +94,71 @@ def test_page_ops_allclose():
     np.testing.assert_array_equal(
         np.asarray(PK.page_gather(pool, tab, interpret=True)),
         np.asarray(PR.page_gather_ref(pool, tab)))
+
+
+# ---------------------------------------------------------------------------
+# page_walk: Sv39 translate + fetch-block gather (fast-path fill chain)
+# ---------------------------------------------------------------------------
+def _build_walk_mem(mem_bytes=1 << 20):
+    """A word image with a 3-level Sv39 table: 4K leaves for vpn 16..64,
+    a faulting (non-U) leaf at vpn 65, nothing at vpn 66+, plus a 2 MiB
+    superpage leaf at vpn1=1 (va 0x200000..0x3FFFFF -> pa 0x80000...)."""
+    mem = np.zeros(mem_bytes // 8, np.uint64)
+    root, l1, l0 = 2, 3, 4
+    flags = (isa.PTE_V | isa.PTE_R | isa.PTE_W | isa.PTE_X | isa.PTE_U |
+             isa.PTE_A | isa.PTE_D)
+    mem[(root * 4096) // 8] = (l1 << 10) | isa.PTE_V
+    mem[(l1 * 4096) // 8] = (l0 << 10) | isa.PTE_V
+    mem[(l1 * 4096) // 8 + 1] = (0x80 << 10) | flags      # 2M superpage
+    for vpn0 in range(16, 65):
+        mem[(l0 * 4096) // 8 + vpn0] = (vpn0 << 10) | flags
+    mem[(l0 * 4096) // 8 + 65] = ((65 << 10) | flags) & ~np.uint64(isa.PTE_U)
+    # recognisable instruction words in the mapped pages
+    code = np.arange(mem_bytes // 8, dtype=np.uint64)
+    code = (code << np.uint64(32)) | (code * np.uint64(2654435761) &
+                                      np.uint64(0xFFFFFFFF))
+    mem[4096 // 8 * 16:] = code[4096 // 8 * 16:]
+    return jnp.asarray(mem), (8 << 60) | root
+
+
+@pytest.mark.parametrize("block_words", [8, 16])
+def test_page_walk_kernel_matches_ref(block_words):
+    mem, satp_v = _build_walk_mem()
+    mask = (1 << 20) - 1
+    vas = [16 * 4096 + 8,            # 4K leaf, mid-page
+           40 * 4096 + 4092,         # 4K leaf, block clamped at page end
+           0x200000 + 0x1234 * 4,    # 2 MiB superpage leaf
+           65 * 4096,                # permission fault (no U bit)
+           66 * 4096,                # invalid leaf -> fault
+           0x7000_0000]              # far outside the table -> fault
+    satp = jnp.full((len(vas),), satp_v, jnp.uint64)
+    va = jnp.asarray(vas, jnp.uint64)
+    r_pa, r_f, r_w, r_i, r_nb = WR.walk_fetch_block_ref(
+        mem, satp, va, jnp.uint64(mask), block_words)
+    k_pa, k_f, k_w, k_i, k_nb = WK.walk_fetch_block(
+        mem, satp, va, mask, block_words, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r_f), np.asarray(k_f))
+    np.testing.assert_array_equal(np.asarray(r_pa), np.asarray(k_pa))
+    np.testing.assert_array_equal(np.asarray(r_w), np.asarray(k_w))
+    np.testing.assert_array_equal(np.asarray(r_nb), np.asarray(k_nb))
+    ok = ~np.asarray(r_f)
+    # instruction slots only meaningful within the valid byte count
+    for lane in np.nonzero(ok)[0]:
+        n = int(np.asarray(r_nb)[lane]) // 4
+        np.testing.assert_array_equal(np.asarray(r_i)[lane, :n],
+                                      np.asarray(k_i)[lane, :n])
+
+
+def test_page_walk_bare_mode():
+    mem, _ = _build_walk_mem()
+    mask = (1 << 20) - 1
+    va = jnp.asarray([0x10000, 0x10002 * 4 + 2], jnp.uint64)
+    satp = jnp.zeros((2,), jnp.uint64)                    # Bare
+    r = WR.walk_fetch_block_ref(mem, satp, va, jnp.uint64(mask), 8)
+    k = WK.walk_fetch_block(mem, satp, va, mask, 8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(k[0]))
+    assert not np.asarray(r[1]).any()
+    assert (np.asarray(r[2]) == np.uint64(WR.NO_WORD)).all()
+    n0 = int(np.asarray(r[4])[0]) // 4
+    np.testing.assert_array_equal(np.asarray(r[3])[0, :n0],
+                                  np.asarray(k[3])[0, :n0])

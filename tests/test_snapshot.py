@@ -148,6 +148,68 @@ def test_delta_ships_only_dirty_pages_and_restores_identically():
 
 
 # ---------------------------------------------------------------------------
+# snapshot under the fast-path interpreter
+# ---------------------------------------------------------------------------
+FAST_VARIANTS = [
+    pytest.param(dict(fast_path=True, block_cache=True), id="fast"),
+    pytest.param(dict(fast_path=True, block_cache=False),
+                 id="fast-nocache"),
+]
+
+
+@pytest.mark.parametrize("jt_kwargs", FAST_VARIANTS)
+def test_fast_path_source_snapshot_bit_identical(jt_kwargs):
+    """A checkpoint captured from a target that ran with batched issue +
+    block cache must equal the PySim capture bit for bit, including the
+    dirty-page delta path (PageH hashes taken on fast-path memory)."""
+    jt = JaxTarget(1, MEM, **jt_kwargs)
+    _load(jt, asm.assemble(SRC))
+    ps = _fresh(PySim)
+    jt.run(max_cycles=250)
+    ps.run(max_cycles=250)
+    base_j = _cap(jt)
+    assert base_j.same_state(_cap(ps))
+
+    jt.run(max_cycles=200)
+    ps.run(max_cycles=200)
+    delta_j, _ = snap.capture(HtpSession(jt, UartChannel()), at=0,
+                              base=base_j)
+    assert 0 < delta_j.wire_pages() < len(base_j.page_hashes)
+    assert delta_j.same_state(_cap(ps))
+
+
+@pytest.mark.parametrize("jt_kwargs", FAST_VARIANTS)
+def test_restore_into_fast_path_invalidates_fetch_blocks(jt_kwargs):
+    """Restoring over a fast-path target that is mid-run through cached
+    fetch blocks must drop them: post-restore execution follows the
+    restored image's *code* — the donor ran a different program at the
+    same addresses — not stale cached instructions."""
+    jt = JaxTarget(1, MEM, **jt_kwargs)
+    _load(jt, asm.assemble(SRC))
+    jt.run(max_cycles=250)                 # blocks cached mid-loop
+
+    donor_src = SRC.replace("addi t2, t2, 3", "addi t2, t2, 9") \
+                   .replace("amoadd.d t5, t2, (s0)",
+                            "amoxor.d t5, t2, (s0)")
+    donor = PySim(1, MEM)
+    _load(donor, asm.assemble(donor_src))
+    donor.run(max_cycles=123)
+    s = _cap(donor)
+    snap.restore(HtpSession(jt, UartChannel()), s, at=0)
+
+    ps = PySim(1, MEM)
+    snap.restore(HtpSession(ps, UartChannel()), s, at=0)
+    jt.run(max_cycles=300)
+    ps.run(max_cycles=300)
+    assert _cap(jt).same_state(_cap(ps))
+    for t in (jt, ps):
+        while not t.pending_cores():
+            t.run(max_cycles=1000)
+    assert _cap(jt).same_state(_cap(ps))
+    assert jt.get_instret(0) == ps.get_instret(0)
+
+
+# ---------------------------------------------------------------------------
 # wire billing
 # ---------------------------------------------------------------------------
 def test_capture_and_restore_bill_the_channel():

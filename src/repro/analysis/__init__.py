@@ -1,0 +1,30 @@
+"""HTP hazard analyzer: static verification of protocol correctness.
+
+Three cooperating pieces (see the module docstrings for the models):
+
+  * :mod:`repro.analysis.footprints` — declarative read/write sets for
+    every Table II opcode, pinned against ``htp.SPECS`` at import;
+  * :mod:`repro.analysis.trace` / :mod:`repro.analysis.detector` — the
+    zero-cost session trace hook and the happens-before race detector
+    over it;
+  * :mod:`repro.analysis.lint` — the static protocol linter (spec-table
+    consistency, builder arity, host-sync antipatterns).
+
+``python -m repro.analysis`` is the CLI (``lint`` / ``race`` /
+``footprints`` / ``gate``); the pytest suite arms the detector over
+every async-session test via an autouse fixture, and CI runs ``gate``.
+"""
+from .detector import Access, Finding, detect, summarize
+from .footprints import ARG_SPECS, conflicts, footprint, key_args
+from .lint import (LintFinding, lint_all, lint_builders, lint_sources,
+                   lint_specs)
+from .trace import (SERIAL_DOMAIN, HtpTrace, TraceEvent, TraceRecorder,
+                    attach_trace, session_is_serial)
+
+__all__ = [
+    "ARG_SPECS", "Access", "Finding", "HtpTrace", "LintFinding",
+    "SERIAL_DOMAIN", "TraceEvent", "TraceRecorder", "attach_trace",
+    "conflicts", "detect", "footprint", "key_args", "lint_all",
+    "lint_builders", "lint_sources", "lint_specs", "session_is_serial",
+    "summarize",
+]

@@ -212,7 +212,15 @@ class AsyncHtpSession(HtpSession):
         if not (ch.enabled and ch.pipelined):
             # serial link: the synchronous arithmetic is the model, and
             # staying byte-for-byte on it is the UART timing contract.
-            res = super().submit(txn, ready)
+            if self.trace is None:
+                res = super().submit(txn, ready)
+            else:
+                # record once, below, with the completion token attached
+                self._trace_suspend = True
+                try:
+                    res = super().submit(txn, ready)
+                finally:
+                    self._trace_suspend = False
             issue = wire_start = ready
         else:
             res, issue, wire_start = self._submit_pipelined(txn, ready, s)
@@ -222,6 +230,8 @@ class AsyncHtpSession(HtpSession):
         s.last_token = res.token
         self.cq.push(Completion(res.token, issue, wire_start, res.done,
                                 len(txn), txn.wire_bytes(self.direct_mode)))
+        if self.trace is not None:
+            self.trace.on_submit(stream, txn, deps, at, ready, res)
         return res
 
     def _submit_pipelined(self, txn, ready, s: SubmissionStream):
@@ -252,7 +262,8 @@ class AsyncHtpSession(HtpSession):
 
         result = TransactionResult(done=ready)
         cum_bytes = 0
-        for req in txn.requests:
+        reads = self._prefetch_reads(txn)
+        for i, req in enumerate(txn.requests):
             nbytes = req.wire_bytes(self.direct_mode)
             ch.account(nbytes, f"htp:{req.op}")
             if req.category:
@@ -264,7 +275,7 @@ class AsyncHtpSession(HtpSession):
             done = max(arrive, s.ctrl_free) + req.ctrl_cycles
             s.ctrl_free = done
             result.ticks.append(done)
-            result.values.append(self._apply(req, done))
+            result.values.append(self._apply(req, done, reads, i))
         self._wire_free = wire_start + ch.ticks_for_bytes(cum_bytes)
         ch.busy_until = max(ch.busy_until, self._wire_free)
         self.stats.uart_ticks += max(0, self._wire_free - ready)

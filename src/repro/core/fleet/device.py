@@ -80,6 +80,10 @@ class Device:
         self.label = label or f"dev{device_id}@{link}"
         self.stats = DeviceStats()
         self._session: HtpSession | None = None
+        # analysis trace (repro.analysis.trace.HtpTrace) armed fleet-wide
+        # by attach_trace; every queue pair this device provisions feeds
+        # it under a (device_id, stream)-prefixed ordering domain
+        self.trace = None
 
     # -- queue pair -----------------------------------------------------
     def provision_ticks_for(self, image_key=None) -> int:
@@ -123,6 +127,14 @@ class Device:
         else:
             self._session = HtpSession(target, ch, hf,
                                        direct_mode=self.direct_mode)
+        if self.trace is not None:
+            # fleet-wide hazard tracing survives re-provisioning: the
+            # fresh queue pair (a migration destination, a re-imaged
+            # board) feeds the same trace under this device's prefix
+            from ...analysis.trace import TraceRecorder, session_is_serial
+            self._session.trace = TraceRecorder(
+                self.trace, session_is_serial(self._session),
+                device=self.id)
         return self._session
 
     @property

@@ -204,15 +204,20 @@ class FleetRuntime:
 
     # -- checkpoint / migration ------------------------------------------
     def checkpoint(self, handle: RunningJob,
-                   base: "snapmod.TargetSnapshot | None" = None):
+                   base: "snapmod.TargetSnapshot | None" = None,
+                   advisory: bool = False):
         """Checkpoint the (paused) job through its device's own queue
         pair — the capture traffic serialises on the source link.  The
         page set is the runtime's allocator view (every referenced
         physical page, hardware page tables included), not a memory
-        scan.  Returns ``(snapshot, done_tick)``."""
+        scan.  Returns ``(snapshot, done_tick)``.  ``advisory`` marks a
+        live pre-copy capture for the hazard analyzer: the job will keep
+        running while the capture drains, and a later fenced capture
+        supersedes everything read here."""
         rt = handle.runtime
         return snapmod.capture(rt.session, at=rt.target.get_ticks(),
-                               pages=sorted(rt.alloc.refcnt), base=base)
+                               pages=sorted(rt.alloc.refcnt), base=base,
+                               advisory=advisory)
 
     def prepare_migration(self, handle: RunningJob, dst: Device):
         """Pre-copy: provision ``dst`` and ship a full base checkpoint
@@ -220,7 +225,7 @@ class FleetRuntime:
         later :meth:`migrate` then pays only the dirty delta.  Returns
         the base snapshot to pass as ``migrate(..., base=)``."""
         assert dst is not handle.device, "pre-copy needs a distinct board"
-        snap, t1 = self.checkpoint(handle)
+        snap, t1 = self.checkpoint(handle, advisory=True)
         sess = dst.provision(handle.image_key)
         snapmod.restore(sess, snap, at=t1, category="migrate")
         snap.resident_session = sess

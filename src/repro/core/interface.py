@@ -28,6 +28,7 @@ import numpy as np
 
 from .target import cpu as _cpu
 
+import jax
 import jax.numpy as jnp
 
 
@@ -50,6 +51,8 @@ class Target(Protocol):
     # Reg bundle ----------------------------------------------------------
     def reg_read(self, c: int, idx: int) -> int: ...
     def reg_write(self, c: int, idx: int, v: int) -> None: ...
+    # Batched host reads (one device sync for any mix of reads) ------------
+    def fetch_batch(self, regs=(), csrs=(), words=()) -> tuple: ...
     # Word / page data access (via injected ld/sd — behavioural) ----------
     def mem_read_word(self, pa: int) -> int: ...
     def mem_write_word(self, pa: int, v: int) -> None: ...
@@ -174,6 +177,30 @@ PySim` — the knobs trade compile time and host speed, never semantics:
     # -- regs -----------------------------------------------------------------
     def reg_read(self, c, idx):
         return int(np.asarray(self.st.regs[c, idx]))
+
+    def fetch_batch(self, regs=(), csrs=(), words=()):
+        """Batched host reads: ONE blocking device sync for any mix of
+        GPRs (``(core, idx)`` pairs), CSR/core-state fields
+        (``(core, name)`` pairs) and physical words (byte addresses).
+        Returns three int lists in input order, bit-identical to the
+        per-element accessors — this is the device half of the session
+        layer's read batching (ROADMAP item 1): a RegR×31 context save
+        is one transfer, not 31 round trips."""
+        st = self.st
+        bundle = {}
+        if regs:
+            cs = jnp.asarray([c for c, _ in regs], dtype=jnp.int32)
+            ix = jnp.asarray([i for _, i in regs], dtype=jnp.int32)
+            bundle["regs"] = st.regs[cs, ix]
+        if csrs:
+            bundle["csrs"] = [getattr(st, name)[c] for c, name in csrs]
+        if words:
+            bundle["words"] = st.mem[
+                jnp.asarray([pa >> 3 for pa in words])]
+        out = jax.device_get(bundle)
+        return ([int(v) for v in out.get("regs", ())],
+                [int(v) for v in out.get("csrs", ())],
+                [int(v) for v in out.get("words", ())])
 
     def reg_write(self, c, idx, v):
         if idx != 0:

@@ -308,10 +308,17 @@ class FaseRuntime:
 
     # ---------------- exception loop ------------------------------------
     def _dispatch_ready(self, now: int):
-        for cpu in range(self.target.n_cores):
-            if cpu in self.sched.running:
-                continue
-            if self.target.get_priv(cpu) != 3:
+        idle = [c for c in range(self.target.n_cores)
+                if c not in self.sched.running]
+        if not idle:
+            return
+        # one batched device fetch for every idle core's privilege level
+        # (switch_in only redirects the core it dispatches, so the other
+        # cores' priv values stay valid across the loop)
+        _, privs, _ = self.target.fetch_batch(
+            csrs=[(c, "priv") for c in idle])
+        for cpu, priv in zip(idle, privs):
+            if priv != 3:
                 continue
             tid = self.sched.pick_next()
             if tid is None:
@@ -394,7 +401,8 @@ class FaseRuntime:
         resumes exactly where it left off.  ``pause_ticks=None`` is the
         plain uninterrupted run."""
         while self.sched.live_threads() > 0:
-            now = self.target.get_ticks()
+            # loop clock source: one scalar per slice, not per-element
+            now = self.target.get_ticks()  # analysis: allow-host-sync
             if pause_ticks is not None and now >= pause_ticks:
                 return None
             self.async_io.poll()
@@ -410,7 +418,7 @@ class FaseRuntime:
             budget = 1 << 62 if pause_ticks is None \
                 else max(pause_ticks - now, 1)
             self.target.run(budget)
-            now = self.target.get_ticks()
+            now = self.target.get_ticks()  # analysis: allow-host-sync
             if self.traffic_hook is not None:
                 self.traffic_hook(now)
             if now > max_ticks:

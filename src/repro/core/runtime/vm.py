@@ -423,32 +423,44 @@ class VirtualMemory:
         t = self.ensure_mapped(va, len(data), cpu, at, want_write=True)
         # one write batch per call; sub-word RMW peeks the target's
         # current words host-side (each word is written at most once per
-        # call, so build-time peeks match submit-time application order)
-        txn = HtpTransaction()
+        # call, so build-time peeks match submit-time application order).
+        # Pass 1 plans the chunks so every RMW peek lands in ONE batched
+        # device fetch (session.peek_words) instead of a blocking
+        # per-word round trip; pass 2 builds the transaction.
+        spans = []                     # (pa, in_page, offset into data)
+        rmw = []                       # word addresses needing a peek
         pos = va
         idx = 0
         remaining = len(data)
         while remaining > 0:
             pa = self.translate(pos)
             in_page = min(remaining, PAGE - (pos & (PAGE - 1)))
+            if not (in_page == PAGE and (pa & (PAGE - 1)) == 0):
+                w0, w1 = pa & ~7, (pa + in_page + 7) & ~7
+                rmw.extend(range(w0, w1, 8))
+            spans.append((pa, in_page, idx))
+            pos += in_page
+            idx += in_page
+            remaining -= in_page
+        old_words = dict(zip(rmw, self.sess.peek_words(rmw))) if rmw \
+            else {}
+        txn = HtpTransaction()
+        for pa, in_page, off in spans:
             if in_page == PAGE and (pa & (PAGE - 1)) == 0:
-                words = np.frombuffer(data[idx:idx + PAGE], dtype=np.uint64)
+                words = np.frombuffer(data[off:off + PAGE],
+                                      dtype=np.uint64)
                 txn.page_write(cpu, pa >> 12, words, category)
             else:
                 w0, w1 = pa & ~7, (pa + in_page + 7) & ~7
                 for wa in range(w0, w1, 8):
-                    old = self.sess.t.mem_read_word(wa)
-                    b = bytearray(int(old).to_bytes(8, "little"))
+                    b = bytearray(int(old_words[wa]).to_bytes(8, "little"))
                     for k in range(8):
                         p = wa + k
                         if pa <= p < pa + in_page:
-                            b[k] = data[idx + (p - pa)]
+                            b[k] = data[off + (p - pa)]
                     txn.mem_write(cpu, wa,
                                   int.from_bytes(bytes(b), "little"),
                                   category)
-            pos += in_page
-            idx += in_page
-            remaining -= in_page
         return self._submit(txn, t, cpu).done
 
     def read_cstr(self, va: int, cpu: int, at: int,

@@ -52,6 +52,9 @@ from . import htp
 from .channel import Channel, UartChannel
 from .hfutex import HFutexCache
 
+#: sentinel distinguishing "not prefetched" from a prefetched 0/None
+_MISS = object()
+
 
 @dataclass(frozen=True)
 class HtpRequest:
@@ -215,6 +218,13 @@ class HtpSession:
         self.ctrl_serialize = ctrl_serialize
         self._ctrl_free: dict = {}       # hart -> controller-slice free tick
         self.stats = SessionStats()
+        # analysis trace hook (repro.analysis.trace.TraceRecorder).  None
+        # by default: the only cost of the disabled hook is one
+        # ``is not None`` test per submit, so golden ticks and wall-clock
+        # are untouched.  ``_trace_suspend`` lets the async layer delegate
+        # to this submit without double-recording.
+        self.trace = None
+        self._trace_suspend = False
 
     # ------------------------------------------------------------------
     def submit(self, txn: HtpTransaction, at: int, stream=0,
@@ -224,19 +234,21 @@ class HtpSession:
         pattern to the target in order.  ``stream`` is accepted for
         signature compatibility with the async layer and ignored here (a
         synchronous session is one implicit stream)."""
+        ready = at
         for dep in deps:
             if dep is not None:
-                at = max(at, dep.tick)
+                ready = max(ready, dep.tick)
         if not txn.requests:          # nothing crosses the wire
-            return TransactionResult(done=at)
+            return TransactionResult(done=ready)
         ch = self.channel
         self.stats.transactions += 1
-        start = ch.begin(at)
+        start = ch.begin(ready)
         enabled = ch.enabled
         cum_bytes = 0
         cum_cycles = 0
-        result = TransactionResult(done=at)
-        for req in txn.requests:
+        reads = self._prefetch_reads(txn)
+        result = TransactionResult(done=ready)
+        for i, req in enumerate(txn.requests):
             nbytes = req.wire_bytes(self.direct_mode)
             ch.account(nbytes, f"htp:{req.op}")
             if req.category:
@@ -245,7 +257,7 @@ class HtpSession:
             self.stats.controller_cycles += req.ctrl_cycles
             cum_bytes += nbytes
             if not enabled:
-                done = at
+                done = ready
             elif self.ctrl_serialize:
                 # per-hart controller slice: the request executes when its
                 # byte prefix has arrived AND the hart's controller is
@@ -259,24 +271,118 @@ class HtpSession:
                 cum_cycles += req.ctrl_cycles
                 done = start + ch.ticks_for_bytes(cum_bytes) + cum_cycles
             result.ticks.append(done)
-            result.values.append(self._apply(req, done))
+            result.values.append(self._apply(req, done, reads, i))
         ch.end(start, cum_bytes)
         if enabled:
             wire_done = start + ch.ticks_for_bytes(cum_bytes)
-            self.stats.uart_ticks += max(0, wire_done - at)
+            self.stats.uart_ticks += max(0, wire_done - ready)
         if not result.ticks:
-            result.done = at
+            result.done = ready
         elif self.ctrl_serialize:
             # multi-hart batches may retire per-slice out of request
             # order; the transaction is done when its last slice is
             result.done = max(result.ticks)
         else:
             result.done = result.ticks[-1]
+        if self.trace is not None and not self._trace_suspend:
+            self.trace.on_submit(stream, txn, deps, at, ready, result)
         return result
 
     # ------------------------------------------------------------------
-    def _apply(self, req: HtpRequest, done: int):
-        """Apply one request's documented effect; returns its response."""
+    # Table II execution patterns a Redirect/Next apply beyond their args
+    # (shared with the prefetch write-set tracking below)
+    _REDIRECT_WRITES = ("pc", "priv", "pending", "stall_until")
+    _NEXT_READS = ("mcause", "mepc", "mtval")
+
+    def _prefetch_reads(self, txn: HtpTransaction):
+        """Gather every register/CSR/word read of ``txn`` into ONE device
+        fetch (``Target.fetch_batch``) instead of one blocking round trip
+        per element — the first step of ROADMAP item 1 (a RegR×31 context
+        save is one transfer, not 31).  Values are bit-identical to the
+        per-element accessors; a read whose location an *earlier* request
+        of the same transaction writes is excluded and falls back to a
+        direct read at apply time.  Returns a dict keyed by request
+        index (``(index, csr_name)`` for a Next's fields) — per-request,
+        not per-location, so a location that is read, then written, then
+        read again never serves the first read's value to the second —
+        or None when there is nothing worth batching (fewer than two
+        reads, or a target without the batch surface)."""
+        t = self.t
+        if t is None or not hasattr(t, "fetch_batch"):
+            return None
+        regs, csrs, words = [], [], []
+        rkeys, ckeys, wkeys = [], [], []
+        dirty = set()
+        n = 0
+        for i, req in enumerate(txn.requests):
+            if req.virtual:
+                continue
+            op, cpu, a = req.op, req.cpu, req.args
+            if op == "RegR":
+                if ("reg", cpu, a[0]) not in dirty:
+                    regs.append((cpu, a[0]))
+                    rkeys.append(i)
+                    n += 1
+            elif op == "CsrR":
+                if ("csr", cpu, a[0]) not in dirty:
+                    csrs.append((cpu, a[0]))
+                    ckeys.append(i)
+                    n += 1
+            elif op == "Next":
+                for name in self._NEXT_READS:
+                    if ("csr", cpu, name) not in dirty:
+                        csrs.append((cpu, name))
+                        ckeys.append((i, name))
+                        n += 1
+                dirty.add(("csr", cpu, "pending"))   # clear_pending
+            elif op == "MemR":
+                if ("mem", a[0] >> 3) not in dirty and \
+                        ("page", a[0] >> 12) not in dirty:
+                    words.append(a[0])
+                    wkeys.append(i)
+                    n += 1
+            elif op == "RegW":
+                dirty.add(("reg", cpu, a[0]))
+            elif op == "CsrW":
+                dirty.add(("csr", cpu, a[0]))
+            elif op == "MemW":
+                dirty.add(("mem", a[0] >> 3))
+            elif op in ("PageS", "PageW"):
+                dirty.add(("page", a[0]))
+            elif op == "PageCP":
+                dirty.add(("page", a[1]))
+            elif op == "Redirect":
+                dirty.update(("csr", cpu, f)
+                             for f in self._REDIRECT_WRITES)
+            elif op == "SetMMU":
+                dirty.add(("csr", cpu, "satp"))
+        if n < 2:
+            return None          # a single read is already one fetch
+        rv, cv, wv = t.fetch_batch(regs, csrs, words)
+        out = {}
+        out.update(zip(rkeys, rv))
+        out.update(zip(ckeys, cv))
+        out.update(zip(wkeys, wv))
+        return out
+
+    def peek_words(self, pas) -> list:
+        """Untimed host-side peeks of physical memory words, batched into
+        one device fetch — read-modify-write staging for sub-word stores
+        (host knowledge, like the loader's image prep: no wire traffic,
+        no ticks)."""
+        t = self.t
+        if hasattr(t, "fetch_batch"):
+            return list(t.fetch_batch((), (), tuple(pas))[2])
+        return [t.mem_read_word(pa) for pa in pas]
+
+    # ------------------------------------------------------------------
+    def _apply(self, req: HtpRequest, done: int, reads: dict | None = None,
+               idx: int = 0):
+        """Apply one request's documented effect; returns its response.
+        ``reads`` is the transaction's prefetched read batch, keyed by
+        request index (:meth:`_prefetch_reads`); reads missing from it
+        (their location written earlier in the same transaction) fall
+        back to direct accessors."""
         if req.virtual:
             return None           # serving analogue: wire/ctrl time only
         t = self.t
@@ -284,11 +390,15 @@ class HtpSession:
         if op == "Redirect":
             t.redirect(cpu, a[0], resume_tick=done)
         elif op == "Next":
-            cause = t.csr_read(cpu, "mcause")
-            epc = t.csr_read(cpu, "mepc")
-            tval = t.csr_read(cpu, "mtval")
+            vals = []
+            for name in self._NEXT_READS:
+                v = _MISS if reads is None else \
+                    reads.get((idx, name), _MISS)
+                if v is _MISS:    # dirtied earlier in this transaction
+                    v = t.csr_read(cpu, name)  # analysis: allow-host-sync
+                vals.append(v)
             t.clear_pending(cpu)
-            return (cause, epc, tval)
+            return tuple(vals)
         elif op == "SetMMU":
             t.set_satp(cpu, a[0])
         elif op == "FlushTLB":
@@ -296,14 +406,26 @@ class HtpSession:
         elif op in ("SyncI", "HFutex"):
             pass                      # mask/ifence effects are host-side
         elif op == "RegR":
+            if reads is not None:
+                v = reads.get(idx, _MISS)
+                if v is not _MISS:
+                    return v
             return t.reg_read(cpu, a[0])
         elif op == "RegW":
             t.reg_write(cpu, a[0], a[1])
         elif op == "CsrR":
+            if reads is not None:
+                v = reads.get(idx, _MISS)
+                if v is not _MISS:
+                    return v
             return t.csr_read(cpu, a[0])
         elif op == "CsrW":
             t.csr_write(cpu, a[0], a[1])
         elif op == "MemR":
+            if reads is not None:
+                v = reads.get(idx, _MISS)
+                if v is not _MISS:
+                    return v
             return t.mem_read_word(a[0])
         elif op == "MemW":
             t.mem_write_word(a[0], a[1])

@@ -145,7 +145,8 @@ def _barrier_deps(session, deps: tuple) -> tuple:
 def capture(session, at: int = 0, pages: list | None = None,
             base: TargetSnapshot | None = None,
             category: str = "snapshot", stream=SNAPSHOT_STREAM,
-            deps: tuple = ()) -> tuple[TargetSnapshot, int]:
+            deps: tuple = (), barrier: bool = True,
+            advisory: bool = False) -> tuple[TargetSnapshot, int]:
     """Checkpoint ``session``'s target through billed HTP traffic.
 
     Returns ``(snapshot, done_tick)``.  With ``base`` the capture is
@@ -153,13 +154,28 @@ def capture(session, at: int = 0, pages: list | None = None,
     only diverging pages cross the wire; the result carries ``base`` as
     its parent.  ``pages`` narrows the candidate set (e.g. a runtime's
     allocated ppns); None scans the target for nonzero pages.
+
+    ``barrier=False`` drops the tail-token fence against in-flight
+    per-hart streams.  That is a protocol violation — the capture may
+    race an in-flight fault batch — kept only as a seeded-hazard hook
+    for the analyzer's corpus (``repro.analysis``), which must flag it.
+
+    ``advisory=True`` declares a *live pre-copy* capture: the job keeps
+    running while the capture's wire transfer drains, so its reads are
+    allowed to race traffic submitted afterwards — every value read
+    here is superseded by a later fenced capture (pages via ``PageH``
+    divergence, core state wholesale).  The hazard analyzer
+    (``repro.analysis``) exempts advisory *reads* and nothing else.
     """
     t = session.t
     assert t is not None, "capture needs a session wrapping a target"
     if pages is None:
         pages = candidate_pages(t)
     cand = sorted(set(pages) | set(base.page_hashes if base else ()))
-    deps = _barrier_deps(session, deps)
+    deps = _barrier_deps(session, deps) if barrier else tuple(deps)
+    rec = session.trace if advisory else None
+    if rec is not None:
+        rec.advisory = True
 
     txn = HtpTransaction()
     for c in range(t.n_cores):
@@ -174,47 +190,52 @@ def capture(session, at: int = 0, pages: list | None = None,
     else:
         for p in cand:
             txn.page_hash(0, p, category)
-    res = session.submit(txn, at, stream=stream, deps=deps)
+    try:
+        res = session.submit(txn, at, stream=stream, deps=deps)
 
-    nfields = 31 + len(SNAPSHOT_CORE_FIELDS)
-    cores = []
-    for c in range(t.n_cores):
-        vals = res.values[c * nfields:(c + 1) * nfields]
-        regs = (0,) + tuple(int(v) & MASK64 for v in vals[:31])
-        csrs = tuple(int(v) & MASK64 for v in vals[31:])
-        cores.append(CoreState(regs, csrs))
-    ticks = int(res.values[t.n_cores * nfields])
-    tail = res.values[t.n_cores * nfields + 1:]
+        nfields = 31 + len(SNAPSHOT_CORE_FIELDS)
+        cores = []
+        for c in range(t.n_cores):
+            vals = res.values[c * nfields:(c + 1) * nfields]
+            regs = (0,) + tuple(int(v) & MASK64 for v in vals[:31])
+            csrs = tuple(int(v) & MASK64 for v in vals[31:])
+            cores.append(CoreState(regs, csrs))
+        ticks = int(res.values[t.n_cores * nfields])
+        tail = res.values[t.n_cores * nfields + 1:]
 
-    snap = TargetSnapshot(t.n_cores, t.mem_bytes, ticks, cores,
-                          parent=base)
-    done = res.done
-    if base is None:
-        for p, words in zip(cand, tail):
-            data = np.ascontiguousarray(words, dtype=np.uint64).tobytes()
-            snap.pages[p] = data
-            snap.page_hashes[p] = htp.page_hash(words)
-    else:
-        snap.page_hashes = {p: int(h) for p, h in zip(cand, tail)}
-        dirty = [p for p in cand
-                 if snap.page_hashes[p] != base.page_hashes.get(p)]
-        if dirty:
-            txn2 = HtpTransaction()
-            for p in dirty:
-                txn2.page_read(0, p, category)
-            res2 = session.submit(txn2, res.done, stream=stream,
-                                  deps=(res.token,))
-            for p, words in zip(dirty, res2.values):
-                snap.pages[p] = np.ascontiguousarray(
-                    words, dtype=np.uint64).tobytes()
-            done = res2.done
+        snap = TargetSnapshot(t.n_cores, t.mem_bytes, ticks, cores,
+                              parent=base)
+        done = res.done
+        if base is None:
+            for p, words in zip(cand, tail):
+                data = np.ascontiguousarray(words,
+                                            dtype=np.uint64).tobytes()
+                snap.pages[p] = data
+                snap.page_hashes[p] = htp.page_hash(words)
+        else:
+            snap.page_hashes = {p: int(h) for p, h in zip(cand, tail)}
+            dirty = [p for p in cand
+                     if snap.page_hashes[p] != base.page_hashes.get(p)]
+            if dirty:
+                txn2 = HtpTransaction()
+                for p in dirty:
+                    txn2.page_read(0, p, category)
+                res2 = session.submit(txn2, res.done, stream=stream,
+                                      deps=(res.token,))
+                for p, words in zip(dirty, res2.values):
+                    snap.pages[p] = np.ascontiguousarray(
+                        words, dtype=np.uint64).tobytes()
+                done = res2.done
+    finally:
+        if rec is not None:
+            rec.advisory = False
     return snap, done
 
 
 def restore(session, snap: TargetSnapshot, at: int = 0,
             category: str = "restore", stream=SNAPSHOT_STREAM,
             deps: tuple = (), delta_only: bool = False,
-            set_ticks: bool = True) -> int:
+            set_ticks: bool = True, barrier: bool = True) -> int:
     """Write ``snap`` into ``session``'s target as one billed HTP batch;
     returns the completion tick.
 
@@ -223,7 +244,8 @@ def restore(session, snap: TargetSnapshot, at: int = 0,
     restored onto the destination earlier.  ``set_ticks`` also restores
     the global tick counter to the snapshot's (cross-backend fidelity);
     migration instead re-aligns the clock to the modelled resume tick
-    afterwards, host-side.
+    afterwards, host-side.  ``barrier=False`` drops the tail-token fence
+    (a protocol violation, kept as the analyzer's seeded-hazard hook).
     """
     t = session.t
     assert t is not None, "restore needs a session wrapping a target"
@@ -244,5 +266,6 @@ def restore(session, snap: TargetSnapshot, at: int = 0,
     for c in range(snap.n_cores):
         txn.flush_tlb(c, category)
     res = session.submit(txn, at, stream=stream,
-                         deps=_barrier_deps(session, deps))
+                         deps=_barrier_deps(session, deps) if barrier
+                         else tuple(deps))
     return res.done

@@ -193,6 +193,15 @@ class PySim:
     def reg_read(self, c, idx):
         return self.regs[c][idx]
 
+    def fetch_batch(self, regs=(), csrs=(), words=()):
+        """Batched host reads, mirroring
+        :meth:`repro.core.interface.JaxTarget.fetch_batch` (same values
+        as the per-element accessors); pure-Python state makes it a
+        plain gather."""
+        return ([self.reg_read(c, i) for c, i in regs],
+                [self.csr_read(c, n) for c, n in csrs],
+                [self.mem_read_word(pa) for pa in words])
+
     def reg_write(self, c, idx, v):
         if idx != 0:
             self.regs[c][idx] = v & MASK64

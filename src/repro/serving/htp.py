@@ -31,23 +31,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import htp
 from ..core.session import HtpRequest, HtpTransaction
 
-# Serving analogue ops and their minimum modelled wire sizes.  Mirrors
-# core/htp.py's _check_specs: the analogue set must stay a subset of
-# Table II, and every override must still carry at least an opcode.
+# Serving analogue ops.  The analogue set must stay a subset of Table II
+# — pinned by the shared protocol linter (``repro.analysis.lint``, which
+# also replaced the import-time assert that used to live here); keep
+# this tuple in sync with ``repro.analysis.lint.SERVING_OPS``.
 _SERVING_OPS = ("Redirect", "SetMMU", "PageCP", "PageS")
-
-
-def _check_serving_specs():
-    missing = [op for op in _SERVING_OPS if op not in htp.SPECS]
-    assert not missing, f"serving analogues out of sync: {missing}"
-    for op in _SERVING_OPS:
-        assert htp.SPECS[op].ctrl_cycles >= 1, op
-
-
-_check_serving_specs()
 
 
 @dataclass
@@ -96,8 +86,9 @@ class CommandBatch:
             txn.add(HtpRequest("PageS", args=(page, 0),
                                category="page_cmds", nbytes=8,
                                virtual=True))
-        assert all(r.nbytes is not None and r.virtual for r in txn), \
-            "serving analogues must carry explicit wire sizes"
+        # every request above carries nbytes= with virtual=True — the
+        # static ``nbytes-not-virtual`` lint enforces the pairing, so no
+        # per-decode-step runtime assert is needed here
         return txn
 
     def account(self, traffic) -> None:

@@ -17,11 +17,13 @@ def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
                  max_ticks=1 << 36, link=None, session="async",
                  queue_depth=8, coalesce_ticks=50, host_us_per_req=12.0,
                  arg_prefetch=False, ctrl_serialize=False,
-                 target_opts=None):
+                 target_opts=None, telemetry=None):
     """``target_opts`` are extra JaxTarget kwargs — the fast-path
     interpreter knobs (``fast_path``/``issue_width``/``block_words``/
     ``block_cache``/``fetch_kernel``), e.g. straight from
-    :func:`repro.configs.fase_rocket.target_kwargs`."""
+    :func:`repro.configs.fase_rocket.target_kwargs`.  ``telemetry``
+    arms the out-of-band bridges — a TelemetryHub kwargs dict, e.g.
+    :func:`repro.configs.fase_rocket.telemetry_kwargs`."""
     if target == "pysim":
         tgt = PySim(n_cores, mem)
     else:
@@ -32,7 +34,7 @@ def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
                      coalesce_ticks=coalesce_ticks,
                      host_us_per_req=host_us_per_req,
                      arg_prefetch=arg_prefetch,
-                     ctrl_serialize=ctrl_serialize)
+                     ctrl_serialize=ctrl_serialize, telemetry=telemetry)
     rt.load(build(name), [name] + argv_tail, files=files or {})
     t0 = time.time()
     rep = rt.run(max_ticks=max_ticks)

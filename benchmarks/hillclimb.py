@@ -23,10 +23,17 @@ PAIRS = [
 ]
 
 
-def main():
+def run(quick=False):
+    """`benchmarks.run` driver entry — the hillclimb has no reduced
+    shape set, so ``quick`` only trims to the first (arch x shape)
+    pair."""
+    return main(pairs=PAIRS[:1] if quick else PAIRS)
+
+
+def main(pairs=PAIRS):
     from repro.launch.dryrun import run_cell
     out = []
-    for arch, shape, variants in PAIRS:
+    for arch, shape, variants in pairs:
         for variant in ["baseline"] + variants:
             try:
                 res = run_cell(arch, shape, False, variant=variant)

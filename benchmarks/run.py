@@ -12,10 +12,10 @@ import time
 def main() -> None:
     quick = "--quick" in sys.argv
     from . import (arg_prefetch, baud_sweep, coremark_accuracy,
-                   fleet_scale, gapbs_accuracy, hfutex_bench,
+                   fleet_scale, gapbs_accuracy, hfutex_bench, hillclimb,
                    htp_vs_direct, migration, roofline, scale_sweep,
-                   serving_traffic, speedup, stall_breakdown,
-                   target_speed)
+                   serving_traffic, speedup, stall_attribution,
+                   stall_breakdown, target_speed)
     modules = [
         ("target_speed", target_speed),
         ("htp_vs_direct", htp_vs_direct),
@@ -31,6 +31,8 @@ def main() -> None:
         ("fleet_scale", fleet_scale),
         ("migration", migration),
         ("roofline", roofline),
+        ("stall_attribution", stall_attribution),
+        ("hillclimb", hillclimb),
     ]
     print("name,us_per_call,derived")
     for name, mod in modules:

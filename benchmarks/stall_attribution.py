@@ -1,0 +1,144 @@
+"""Fleet-wide stall attribution from the out-of-band counter bridge.
+
+Every job runs with the telemetry counter bridge armed
+(``FleetRuntime(runtime_kwargs={"telemetry": ...})`` — per-device hubs
+on the side-band lane, so arming changes no golden tick), and the final
+counter sample of each job yields a per-hart decomposition of its
+modelled time into three reasons:
+
+  * ``compute``    — ``uticks``: ticks the hart spent retiring,
+  * ``link_stall`` — ``stall_ticks``: ticks parked on the syscall/futex
+    stall horizon (host round-trip + wire time of Layer-A/Layer-B),
+  * ``idle``       — the residual: armed but no runnable thread.
+
+The three are exhaustive by construction (``compute + link_stall +
+idle == ticks`` per hart — asserted, with ``idle >= 0`` the real
+invariant), so aggregating over the jobs each board ran gives the
+fleet-wide (device, core, reason) breakdown the capacity question
+needs: *where do the fleet's cycles actually go?*  A roofline-style
+per-device panel (modelled instr/s against wire bytes/instr) rides
+along, built from the same samples plus the device wire accounting.
+
+Artifact: ``results/stall_attribution.json``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import save_json
+from repro.configs.fase_rocket import (FASE_FLEET, fleet_kwargs,
+                                       telemetry_kwargs)
+from repro.core.fleet import FleetRuntime, Job
+from repro.core.target.cpu import CLOCK_HZ
+from repro.core.target.pysim import PySim
+from repro.core.workloads import graphgen
+
+N_CORES = 2
+MEM = 1 << 23
+REASONS = ("compute", "link_stall", "idle")
+
+
+def _fleet(quick: bool) -> FleetRuntime:
+    kw = fleet_kwargs(FASE_FLEET)
+    kw.pop("links", None)
+    tel = telemetry_kwargs(FASE_FLEET)
+    if quick:
+        tel["interval_ticks"] = 20_000
+    return FleetRuntime(make_target=lambda: PySim(N_CORES, MEM),
+                        runtime_kwargs={"telemetry": tel}, **kw)
+
+
+def _job_core_rows(result) -> list[dict]:
+    """Per-hart reason decomposition of one finished job, from its
+    final (forced) counter sample."""
+    tel = result.report.telemetry
+    sample = tel["counters"]["samples"][-1]
+    ticks = sample["tick"]
+    rows = []
+    for c, ctr in enumerate(sample["cores"]):
+        compute = ctr["uticks"]
+        link_stall = ctr["stall_ticks"]
+        idle = ticks - compute - link_stall
+        assert idle >= 0, (result.job.job_id, c, ticks, ctr)
+        rows.append(dict(device=result.device_id, job=result.job.job_id,
+                         workload=result.job.name, core=c, ticks=ticks,
+                         instret=ctr["instret"], compute=compute,
+                         link_stall=link_stall, idle=idle))
+    return rows
+
+
+def run(quick: bool = False):
+    g = graphgen.rmat(4 if quick else 5, 8, weights=True)
+    fr = _fleet(quick)
+    n_jobs = 4 if quick else 8
+    for i in range(n_jobs):
+        if i % 4 == 3:        # skew the mix: every 4th job is tiny
+            fr.submit(Job("hello"))
+        else:
+            fr.submit(Job("bc", ["g.bin", str(N_CORES), "1"],
+                          files={"g.bin": g}))
+    rep = fr.run()
+
+    job_rows = [r for res in rep.jobs for r in _job_core_rows(res)]
+
+    # fleet-wide (device, core, reason) aggregation
+    agg: dict = {}
+    for r in job_rows:
+        key = (r["device"], r["core"])
+        a = agg.setdefault(key, dict.fromkeys(
+            REASONS + ("ticks", "instret"), 0))
+        for reason in REASONS:
+            a[reason] += r[reason]
+        a["ticks"] += r["ticks"]
+        a["instret"] += r["instret"]
+    breakdown = []
+    for (dev, core), a in sorted(agg.items()):
+        total = max(a["ticks"], 1)
+        for reason in REASONS:
+            breakdown.append(dict(device=dev, core=core, reason=reason,
+                                  ticks=a[reason],
+                                  frac=a[reason] / total))
+        print(f"stall_attribution,dev{dev}/core{core},{a['ticks']},"
+              + " ".join(f"{reason}={a[reason] / total:.3f}"
+                         for reason in REASONS), flush=True)
+
+    # roofline-style per-device panel: modelled instruction throughput
+    # against wire traffic intensity
+    roofline = []
+    for dev, stats in sorted(rep.devices.items()):
+        instret = sum(a["instret"] for (d, _), a in agg.items()
+                      if d == dev)
+        busy_s = stats["busy_ticks"] / CLOCK_HZ
+        roofline.append(dict(
+            device=dev, jobs=stats["jobs"], busy_ticks=stats["busy_ticks"],
+            instret=instret, wire_bytes=stats["wire_bytes"],
+            instr_per_s=instret / max(busy_s, 1e-12),
+            bytes_per_instr=stats["wire_bytes"] / max(instret, 1)))
+
+    # telemetry-lane health across the fleet (drops are allowed — the
+    # lane is lossy by design — but must be visible)
+    lane = [dict(device=res.device_id, job=res.job.job_id,
+                 **res.report.telemetry["stream"])
+            for res in rep.jobs]
+
+    out = dict(quick=quick, clock_hz=CLOCK_HZ,
+               n_devices=rep.n_devices, n_jobs=n_jobs,
+               makespan_ticks=rep.makespan_ticks,
+               breakdown=breakdown, per_job_cores=job_rows,
+               roofline=roofline, telem_lane=lane)
+    save_json("stall_attribution.json", out)
+    devs = {r["device"] for r in breakdown}
+    fleet_total = sum(r["ticks"] for r in breakdown)
+    stall_frac = sum(r["ticks"] for r in breakdown
+                     if r["reason"] == "link_stall") / max(fleet_total, 1)
+    print(f"stall_attribution,summary,{rep.makespan_ticks},"
+          f"devices={len(devs)} rows={len(breakdown)} "
+          f"fleet_link_stall={stall_frac:.3f}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -28,12 +28,12 @@ from .trace import attach_trace
 
 
 def _run_runtime_trace(name, argv_tail, link, n_cores, files=None,
-                       mem=1 << 22):
+                       mem=1 << 22, telemetry=None):
     from ..core.runtime import FaseRuntime
     from ..core.target.pysim import PySim
     from ..core.workloads import build
     rt = FaseRuntime(PySim(n_cores, mem), mode="fase", link=link,
-                     session="async")
+                     session="async", telemetry=telemetry)
     trace = attach_trace(rt.session)
     rt.load(build(name), [name] + list(argv_tail), files=files or {})
     rt.run()
@@ -79,6 +79,13 @@ def _workloads(quick: bool):
     yield "bc-2T@pcie(multi-stream)", lambda: _run_runtime_trace(
         "bc", ["g.bin", "2", "1"], link="pcie", n_cores=2,
         files={"g.bin": g})
+    # both telemetry bridges armed: the telem lane's reads must be
+    # race-free against ordinary traffic (always-concurrent domain)
+    yield "bc-2T@pcie(telemetry-armed)", lambda: _run_runtime_trace(
+        "bc", ["g.bin", "2", "1"], link="pcie", n_cores=2,
+        files={"g.bin": g},
+        telemetry=dict(counters=True, commit_trace=True,
+                       interval_ticks=50_000, trace_slots=256))
     yield "migrate@pcie(fleet)", lambda: _run_fleet_trace(quick)
 
 

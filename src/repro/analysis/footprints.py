@@ -28,6 +28,8 @@ Locations are plain tuples, namespaced by kind:
   ``("hfutex", cpu)``       the controller's futex mask cache
   ``("clock",)``            the global tick counter
   ``("uticks", cpu)``       one hart's user-tick counter
+  ``("tracebuf", cpu)``     one hart's commit-trace ring (telemetry:
+                            ``TraceB`` drains it — read + write)
   ``("vpage", page)`` /     Layer-B serving analogues (``virtual``
   ``("vslot", slot)``       requests): pod block pages / decode slots.
                             A separate namespace — serving block ids are
@@ -77,6 +79,8 @@ ARG_SPECS: dict[str, tuple] = {
     "PageH": ("ppn",),
     "Tick": (),
     "UTick": (),
+    "CtrSample": (),
+    "TraceB": (),
 }
 
 #: args-tuple indices the footprint/trace layer retains per opcode
@@ -172,6 +176,16 @@ def footprint(op: str, cpu: int, kargs: tuple, virtual: bool = False
         return (("clock",),), ()
     if op == "UTick":
         return (("uticks", cpu),), ()
+    if op == "CtrSample":
+        # out-of-band counter sample: reads the hart's retirement
+        # counters and the global clock, mutates nothing — so a sample
+        # races only against writers of those (CsrW of ticks/instret,
+        # i.e. snapshot restore), never against ordinary traffic
+        return (("clock",), ("uticks", cpu), ("csr", cpu, "instret")), ()
+    if op == "TraceB":
+        # commit-trace frame drain: consumes the hart's trace ring
+        # (read + write — draining advances the ring's read cursor)
+        return (("tracebuf", cpu),), (("tracebuf", cpu),)
     raise KeyError(f"no footprint for HTP request {op!r}")
 
 

@@ -66,6 +66,9 @@ DEFAULT_SCAN = (
     "src/repro/core/fleet/device.py",
     "src/repro/core/fleet/router.py",
     "src/repro/core/fleet/runtime.py",
+    "src/repro/telemetry/stream.py",
+    "src/repro/telemetry/bridges.py",
+    "src/repro/telemetry/replay.py",
     "src/repro/serving/htp.py",
     "src/repro/serving/engine.py",
     "src/repro/serving/pages.py",

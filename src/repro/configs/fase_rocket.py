@@ -38,6 +38,21 @@ def target_kwargs(cfg: dict = FASE_ROCKET) -> dict:
             if old in cfg}
 
 
+_TELEM_RENAMED = {"telem_interval_ticks": "interval_ticks",
+                  "telem_bandwidth_frac": "bandwidth_frac",
+                  "telem_trace_slots": "trace_slots",
+                  "telem_backlog_ticks": "backlog_ticks"}
+
+
+def telemetry_kwargs(cfg: dict = FASE_ROCKET) -> dict:
+    """Keyword surface of :class:`~repro.telemetry.TelemetryHub` from a
+    registry target config — pass as ``FaseRuntime(telemetry=...)`` (or
+    inside ``FleetRuntime``'s ``runtime_kwargs``) to arm the bridges
+    with the config's provisioned lane."""
+    return {new: cfg[old] for old, new in _TELEM_RENAMED.items()
+            if old in cfg}
+
+
 _FLEET_KEYS = ("n_devices", "placement", "provision_us")
 _FLEET_RENAMED = {"device_links": "links"}
 

@@ -77,12 +77,21 @@ xlstm_350m = _add(ModelConfig(
 # each other (results/target_speed.json records both); the cache stays
 # on because the Pallas fill path's contiguous block DMA is the
 # accelerator-side win.
+# The telem_* knobs provision the out-of-band telemetry lane
+# (repro.telemetry): counter-sample cadence, the fraction of link
+# bandwidth the side-band lane is granted, the commit-trace ring depth
+# per hart, and the backlog bound past which frames are dropped.
+# Telemetry is armed per-run (FaseRuntime's ``telemetry=`` kwarg via
+# ``fase_rocket.telemetry_kwargs``), never implicitly — golden ticks
+# are pinned both ways.
 FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
                    link="uart", baud=921600, l1=32 << 10, l2=256 << 10,
                    session="async", qp_depth=8, qp_coalesce_ticks=50,
                    target_fast_path=True, target_issue_width=8,
                    target_block_words=16, target_block_cache=True,
-                   target_fetch_kernel="ref")
+                   target_fetch_kernel="ref",
+                   telem_interval_ticks=100_000, telem_bandwidth_frac=0.1,
+                   telem_trace_slots=4096, telem_backlog_ticks=1 << 20)
 
 # the same target behind a modelled PCIe/AXI-DMA link (the scale-up
 # direction: bandwidth-rich, latency-dominated — batching + queue-pair

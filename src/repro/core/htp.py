@@ -94,6 +94,27 @@ _add("Tick", "perf", 1, WORD, 1)
 _add("UTick", "perf", 2, WORD, 1)
 
 # ---------------------------------------------------------------------------
+# Out-of-band telemetry (AutoCounter/TracerV-style bridges, repro.telemetry).
+# These requests ride the dedicated low-priority "telem" stream with its own
+# modelled bandwidth budget — they are *timed but non-perturbing*: the wire
+# model charges them on the telemetry lane, never on the Layer-A/Layer-B
+# transaction path, so golden ticks hold with bridges armed.
+# ---------------------------------------------------------------------------
+#: per-hart counters one CtrSample frame carries, in frame order.  The
+#: first four are architectural (bit-identical across backends, the
+#: counter-identity tests pin PySim == JaxTarget); the last two are
+#: backend model counters (fetch-block cache on the jitted fast path,
+#: data-TLB walks on PySim) and read 0 on the other backend.
+TELEM_COUNTERS = ("instret", "uticks", "stall_ticks",
+                  "trace_n", "fetch_hits", "tlb_walks")
+#: commit records per TraceB frame (fixed frame: 4 words per record)
+TRACE_FRAME_RECORDS = 16
+_add("CtrSample", "telem", 2, 2 + len(TELEM_COUNTERS) * WORD,
+     len(TELEM_COUNTERS) * _REG + 1)
+_add("TraceB", "telem", 2, 2 + WORD + TRACE_FRAME_RECORDS * 4 * WORD,
+     _REG + TRACE_FRAME_RECORDS * (_INJ + _REG))
+
+# ---------------------------------------------------------------------------
 # Direct per-port baseline (no HTP consolidation).  Each injected
 # instruction is shipped as an individual UART message (opcode + 4-byte
 # instruction + ack), each Reg read/write likewise (opcode + idx + 8-byte
@@ -129,6 +150,12 @@ DIRECT_BYTES: dict[str, int] = {
     "PageH": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
     "Tick": 10,
     "UTick": 10,
+    # telemetry without HTP framing: each counter / trace-record word is
+    # an individual csrr + Reg-port read over the link
+    "CtrSample": len(TELEM_COUNTERS) * (DIRECT_INJ_BYTES
+                                        + DIRECT_REGR_BYTES),
+    "TraceB": TRACE_FRAME_RECORDS * 4 * (DIRECT_INJ_BYTES
+                                         + DIRECT_REGR_BYTES),
 }
 
 
@@ -145,7 +172,9 @@ def payload_bytes(name: str) -> int:
             "Next": 3 * WORD, "Tick": WORD, "UTick": WORD,
             "Redirect": WORD, "SetMMU": WORD, "PageH": WORD,
             "PageS": WORD, "PageCP": 0, "FlushTLB": 0, "SyncI": 0,
-            "HFutex": WORD}[name]
+            "HFutex": WORD,
+            "CtrSample": len(TELEM_COUNTERS) * WORD,
+            "TraceB": TRACE_FRAME_RECORDS * 4 * WORD}[name]
 
 
 def page_hash(words) -> int:

@@ -64,6 +64,9 @@ class Target(Protocol):
     def get_ticks(self) -> int: ...
     def get_uticks(self, c: int) -> int: ...
     def get_instret(self, c: int) -> int: ...
+    # Telemetry: commit-trace ring (repro.telemetry) -----------------------
+    def trace_arm(self, slots: int) -> None: ...
+    def trace_drain(self, c: int | None = None): ...
 
 
 class JaxTarget:
@@ -101,6 +104,8 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         self.block_words = block_words
         self.block_cache = block_cache
         self.fetch_kernel = fetch_kernel
+        self.trace_slots = 0          # commit-trace ring, off by default
+        self._trace_base: list = []
         self.st = _cpu.make_state(n_cores, mem_bytes)
 
     # -- inst stream ------------------------------------------------------
@@ -114,7 +119,7 @@ PySim` — the knobs trade compile time and host speed, never semantics:
             self.st = _cpu.run_chunk_fast(
                 self.st, self.nc, self.mem_bytes, budget,
                 self.issue_width, self.block_words, self.block_cache,
-                self.fetch_kernel)
+                self.fetch_kernel, self.trace_slots > 0)
         else:
             self.st = _cpu.run_chunk(self.st, self.nc, self.mem_bytes,
                                      budget)
@@ -245,3 +250,45 @@ PySim` — the knobs trade compile time and host speed, never semantics:
 
     def get_instret(self, c):
         return int(np.asarray(self.st.instret[c]))
+
+    # -- telemetry: commit-trace ring (repro.telemetry) --------------------
+    def trace_arm(self, slots):
+        """Arm per-core commit-trace capture: rebuilds the carry with a
+        ``(nc, slots, 4)`` ring so the next ``run`` compiles the
+        trace-recording variant of the fast path."""
+        assert self.fast_path, \
+            "commit-trace capture needs the fast path (run_chunk_fast)"
+        assert slots > 0
+        self.trace_slots = slots
+        self.st = self.st._replace(
+            tracebuf=jnp.zeros((self.nc, slots, 4), jnp.uint64),
+            trace_n=jnp.zeros((self.nc,), jnp.uint64))
+        self._trace_base = [0] * self.nc
+
+    def trace_drain(self, c=None):
+        """Drain commit-trace rings, mirroring
+        :meth:`repro.core.target.pysim.PySim.trace_drain` bit-for-bit:
+        ``(records, ring_dropped)`` per hart.  ``c=None`` bundles every
+        hart's ring + produced-counts into ONE ``jax.device_get`` (the
+        ``fetch_batch`` discipline — a drain is a chunk-boundary bulk
+        read, not per-record round trips)."""
+        if self.trace_slots == 0:     # unarmed: nothing to drain
+            return ([], 0) if c is not None else [([], 0)] * self.nc
+        if c is None:
+            buf, totals = jax.device_get((self.st.tracebuf,
+                                          self.st.trace_n))
+            return [self._drain_host(buf[i], int(totals[i]), i)
+                    for i in range(self.nc)]
+        buf, total = jax.device_get((self.st.tracebuf[c],
+                                     self.st.trace_n[c]))
+        return self._drain_host(buf, int(total), c)
+
+    def _drain_host(self, buf, total, c):
+        slots = self.trace_slots
+        base = self._trace_base[c]
+        n_new = total - base
+        dropped = max(0, n_new - slots)
+        recs = [tuple(int(v) for v in buf[i % slots])
+                for i in range(total - (n_new - dropped), total)]
+        self._trace_base[c] = total
+        return recs, dropped

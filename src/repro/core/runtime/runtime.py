@@ -63,6 +63,7 @@ class Report:
     vm: dict = field(default_factory=dict)
     hfutex: dict = field(default_factory=dict)
     cq: dict = field(default_factory=dict)   # queue-pair engine counters
+    telemetry: dict = field(default_factory=dict)  # out-of-band bridges
     load_ticks: int = 0
     exit_code: int = 0
 
@@ -85,7 +86,7 @@ class FaseRuntime:
                  queue_depth: int = 8, coalesce_ticks: int = 50,
                  ctrl_serialize: bool = False, arg_prefetch: bool = False,
                  bill_switch_host: bool = False,
-                 session_obj=None, traffic_hook=None):
+                 session_obj=None, traffic_hook=None, telemetry=None):
         assert mode in ("fase", "oracle")
         assert session in ("async", "sync")
         self.target = target
@@ -127,6 +128,13 @@ class FaseRuntime:
         # iteration so background (e.g. Layer-B serving) traffic can be
         # injected onto this runtime's shared link
         self.traffic_hook = traffic_hook
+        # out-of-band telemetry (repro.telemetry): a TelemetryHub kwargs
+        # dict (or a ready hub) armed over this runtime's session; pumped
+        # after every target chunk, flushed + reported by finish()
+        if telemetry is not None and not hasattr(telemetry, "pump"):
+            from ...telemetry import TelemetryHub   # local: no cycle
+            telemetry = TelemetryHub(self.session, **telemetry)
+        self.telemetry = telemetry
         self.alloc = PageAllocator(target.mem_bytes)
         self.vm = VirtualMemory(self.session, self.alloc,
                                 fault_preload=fault_preload)
@@ -421,6 +429,8 @@ class FaseRuntime:
             now = self.target.get_ticks()  # analysis: allow-host-sync
             if self.traffic_hook is not None:
                 self.traffic_hook(now)
+            if self.telemetry is not None:
+                self.telemetry.pump(now)
             if now > max_ticks:
                 raise TimeoutError(f"exceeded {max_ticks} target ticks")
             if self.stats["exceptions"] > max_exceptions:
@@ -447,8 +457,14 @@ class FaseRuntime:
         self.session = session
         self.vm.sess = session
         self.link = session.channel.name
+        if self.telemetry is not None:
+            self.telemetry.rebind(session)
 
     def finish(self) -> Report:
+        # flush telemetry first: a final forced counter sample + ring
+        # drain on the telem lane (side-band — cannot move the harvest)
+        if self.telemetry is not None:
+            self.telemetry.finish(self.target.get_ticks())
         # final counter harvest: Tick + per-core UTick as one transaction,
         # barriered on every stream's last completion token
         txn = HtpTransaction().tick()
@@ -482,6 +498,8 @@ class FaseRuntime:
                     "inserts": sess.hfutex.inserts},
             cq=(sess.cqstats.as_dict()
                 if isinstance(sess, AsyncHtpSession) else {}),
+            telemetry=(self.telemetry.report()
+                       if self.telemetry is not None else {}),
             load_ticks=self.load_ticks,
             exit_code=self.exit_code,
         )

@@ -157,6 +157,15 @@ class HtpTransaction:
     def utick(self, cpu):
         return self.add(HtpRequest("UTick", cpu))
 
+    def ctr_sample(self, cpu):
+        """Out-of-band counter frame of one hart (telemetry stream)."""
+        return self.add(HtpRequest("CtrSample", cpu))
+
+    def trace_burst(self, cpu):
+        """One commit-trace frame drained from one hart's ring
+        (telemetry stream; fixed ``htp.TRACE_FRAME_RECORDS`` records)."""
+        return self.add(HtpRequest("TraceB", cpu))
+
     # -- wire size -------------------------------------------------------
     def wire_bytes(self, direct: bool = False) -> int:
         return sum(r.wire_bytes(direct) for r in self.requests)
@@ -443,6 +452,15 @@ class HtpSession:
             return t.get_ticks()
         elif op == "UTick":
             return t.get_uticks(cpu)
+        elif op == "CtrSample":
+            # one bundled device fetch for the whole counter frame
+            return tuple(t.fetch_batch(
+                csrs=[(cpu, n) for n in htp.TELEM_COUNTERS])[1])
+        elif op == "TraceB":
+            # drain the hart's commit-trace ring (records, ring_dropped);
+            # the telemetry bridge normally drains host-side and ships
+            # the frames pre-filled — this path serves direct submission
+            return t.trace_drain(cpu)
         else:
             raise KeyError(f"unknown HTP request {op!r}")
         return None

@@ -92,9 +92,21 @@ class CpuState(NamedTuple):
     ticks: jax.Array         # () u64
     uticks: jax.Array        # (nc,) u64
     instret: jax.Array       # (nc,) u64
+    # -- telemetry counters (repro.telemetry; NOT snapshot state) --------
+    stall_ticks: jax.Array   # (nc,) u64 — ticks spent active-but-stalled
+    fetch_hits: jax.Array    # (nc,) u64 — fetch-block cache hits (model)
+    fetch_walks: jax.Array   # (nc,) u64 — fetch-block fills/walks (model)
+    tlb_walks: jax.Array     # (nc,) u64 — data-TLB walks (PySim model
+    #                          counter: this backend walks every access,
+    #                          so it stays 0 here by definition)
+    tracebuf: jax.Array      # (nc, slots, 4) u64 — commit-trace ring:
+    #                          (tick, pc, inst, priv) per retirement
+    trace_n: jax.Array       # (nc,) u64 — records ever produced (the
+    #                          host derives ring drops from this)
 
 
-def make_state(n_cores: int, mem_bytes: int) -> CpuState:
+def make_state(n_cores: int, mem_bytes: int,
+               trace_slots: int = 0) -> CpuState:
     assert mem_bytes & (mem_bytes - 1) == 0, "mem_bytes must be pow2"
     nc = n_cores
     z = lambda: jnp.zeros((nc,), U64)       # noqa: E731
@@ -105,6 +117,8 @@ def make_state(n_cores: int, mem_bytes: int) -> CpuState:
         res=jnp.full((nc,), _RES_INVALID, U64),
         mem=jnp.zeros((mem_bytes // 8,), U64),
         ticks=_u(0), uticks=z(), instret=z(),
+        stall_ticks=z(), fetch_hits=z(), fetch_walks=z(), tlb_walks=z(),
+        tracebuf=jnp.zeros((nc, trace_slots, 4), U64), trace_n=z(),
     )
 
 
@@ -502,7 +516,7 @@ def _empty_blocks(nc: int, block_words: int) -> FetchBlocks:
 
 def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
                   budget_left, nc: int, mask, block_words: int,
-                  block_cache: bool, walk_fetch):
+                  block_cache: bool, walk_fetch, trace_on: bool = False):
     """One fast-path substep: a whole global tick in the common case.
 
     Mirrors :func:`_exec_one` lane-wise from the pre-substep state, then
@@ -820,6 +834,34 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
 
     def cut(v):
         return v if L == nc else v[:nc]
+
+    # ---- telemetry counters (repro.telemetry; pure accounting) ---------
+    # Stall accrual mirrors the reference loop exactly: on a completed
+    # exec tick every active-but-stalled core accrues 1; on a skip tick
+    # every active core accrues the fast-forward gap (the gap is the
+    # minimum remaining stall, so it never overshoots any lane); a
+    # deferred substep (dticks = 0) accrues nothing.
+    stalled = cut(active & (stall > st.ticks))
+    dstall = jnp.where(stalled,
+                       jnp.minimum(cut(stall) - st.ticks, dticks), _u(0))
+    if trace_on:
+        # Commit-trace ring: one (tick, pc, inst, priv) record per
+        # retirement at trace_n % slots; non-retiring lanes scatter to
+        # an out-of-range row and drop.  The host derives overflow drops
+        # from the monotone trace_n, so ring wrap is loss-*counting*,
+        # never loss-hiding.
+        slots = st.tracebuf.shape[1]
+        ret_nc = cut(ret)
+        rows = jnp.where(ret_nc, jnp.arange(nc, dtype=jnp.int32),
+                         jnp.int32(nc))
+        ring = (st.trace_n % _u(slots)).astype(jnp.int32)
+        rec = jnp.stack([jnp.broadcast_to(st.ticks, (nc,)), cut(pc),
+                         cut(inst), cut(priv).astype(U64)], axis=1)
+        new_tracebuf = st.tracebuf.at[rows, ring].set(rec, mode="drop")
+        new_trace_n = st.trace_n + ret_nc.astype(U64)
+    else:
+        new_tracebuf, new_trace_n = st.tracebuf, st.trace_n
+
     st = st._replace(
         regs=cut(new_regs),
         pc=cut(jnp.where(ret, next_pc, pc)),
@@ -832,6 +874,11 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         ticks=st.ticks + dticks,
         uticks=st.uticks + cut(retired),
         instret=st.instret + cut(retired),
+        stall_ticks=st.stall_ticks + dstall,
+        fetch_hits=st.fetch_hits + cut((hit & safe).astype(U64)),
+        fetch_walks=st.fetch_walks + cut((miss & safe).astype(U64)),
+        tracebuf=new_tracebuf,
+        trace_n=new_trace_n,
     )
     if L != nc:
         fb = FetchBlocks(fb.vbase[:nc], fb.pbase[:nc], fb.nbytes[:nc],
@@ -839,11 +886,12 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     return st, fb, new_from, dticks
 
 
-@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7), donate_argnums=(0,))
+@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7, 8),
+         donate_argnums=(0,))
 def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
                    issue_width: int = 8, block_words: int = 16,
-                   block_cache: bool = True,
-                   fetch_kernel: str = "ref") -> CpuState:
+                   block_cache: bool = True, fetch_kernel: str = "ref",
+                   trace_on: bool = False) -> CpuState:
     """Fast-path twin of :func:`run_chunk`: identical architectural
     semantics, up to ``issue_width`` vectorized ticks per loop iteration.
 
@@ -855,6 +903,8 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
     kernel, native on TPU).
     """
     assert block_words & (block_words - 1) == 0, "block_words must be pow2"
+    assert not trace_on or st.tracebuf.shape[1] > 0, \
+        "trace_on needs an armed ring (make_state trace_slots / trace_arm)"
     nc = n_cores
     mask = _u(mem_bytes - 1)
     limit = jnp.asarray(max_cycles, U64)
@@ -892,7 +942,7 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
             gate = ~jnp.any(st.pending) & (cycles < limit)
             st, fb, exec_from, d = _exec_substep(
                 st, fb, exec_from, gate, limit - cycles, nc, mask,
-                block_words, block_cache, walk_fetch)
+                block_words, block_cache, walk_fetch, trace_on)
             return st, cycles + d, exec_from, fb
 
         # fori_loop: the substep traces once, runs issue_width times — a

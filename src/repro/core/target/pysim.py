@@ -96,6 +96,23 @@ class PySim:
         self.ticks = 0
         self.uticks = [0] * n
         self.instret = [0] * n
+        # Telemetry counters (repro.telemetry).  stall_ticks is
+        # architectural (mirrored bit-for-bit by the jitted target);
+        # tlb_walks is this backend's model counter (the jitted target
+        # walks every access, so it has nothing to count); fetch_hits/
+        # fetch_walks are the fast path's fetch-block-cache model
+        # counters and stay 0 here by the same symmetry.
+        self.stall_ticks = [0] * n
+        self.fetch_hits = [0] * n
+        self.fetch_walks = [0] * n
+        self.tlb_walks = [0] * n
+        # Commit-trace ring (armed via trace_arm): per-core fixed-size
+        # ring of (tick, pc, inst, priv) retirement records plus the
+        # monotone produced-count the host derives overflow drops from.
+        self.trace_slots = 0
+        self.tracebuf = [[] for _ in range(n)]
+        self.trace_n = [0] * n
+        self._trace_base = [0] * n
         # Two-level host-side translation cache (pure speed, no modelled
         # cost; the jitted target walks every access so nothing to
         # mirror).  L1 is per-core and dropped on set_satp — i.e. every
@@ -126,19 +143,29 @@ class PySim:
             if not active:
                 break
             now = self.ticks
-            ran = False
+            ran = 0
             for c in active:
                 if stall[c] <= now:
                     self._step(c)
-                    ran = True
+                    ran += 1
             if ran:
+                if ran != len(active):
+                    # active-but-stalled cores accrue one stall tick
+                    st_t = self.stall_ticks
+                    for c in active:
+                        if stall[c] > now:
+                            st_t[c] += 1
                 self.ticks = now + 1
                 cycles += 1
             else:
                 # every live core is stalled: fast-forward to the next
-                # wake-up (nothing can change state in between)
+                # wake-up (nothing can change state in between); the gap
+                # is the minimum remaining stall, so every active core
+                # accrues all of it
                 gap = min(stall[c] for c in active) - now
                 gap = min(gap, limit - cycles)
+                for c in active:
+                    self.stall_ticks[c] += gap
                 self.ticks = now + gap
                 cycles += gap
 
@@ -243,6 +270,33 @@ class PySim:
     def get_instret(self, c):
         return self.instret[c]
 
+    # -- telemetry: commit-trace ring (repro.telemetry) ------------------
+    def trace_arm(self, slots: int):
+        """Arm per-core commit-trace capture with a ``slots``-record
+        ring per hart (resets any previous capture)."""
+        assert slots > 0
+        self.trace_slots = slots
+        self.tracebuf = [[None] * slots for _ in range(self.nc)]
+        self.trace_n = [0] * self.nc
+        self._trace_base = [0] * self.nc
+
+    def trace_drain(self, c=None):
+        """Drain one hart's ring (``c=None``: every hart, bundled):
+        returns ``(records, ring_dropped)`` — the surviving
+        ``(tick, pc, inst, priv)`` records since the previous drain in
+        commit order, and how many older records the ring overwrote."""
+        if c is None:
+            return [self.trace_drain(i) for i in range(self.nc)]
+        total = self.trace_n[c]
+        base = self._trace_base[c]
+        n_new = total - base
+        dropped = max(0, n_new - self.trace_slots)
+        ring = self.tracebuf[c]
+        recs = [ring[i % self.trace_slots]
+                for i in range(total - (n_new - dropped), total)]
+        self._trace_base[c] = total
+        return recs, dropped
+
     # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
@@ -259,6 +313,7 @@ class PySim:
         if hit is not None and hit[1] & _ACC_PTE[acc]:
             self.tlb[c][vpn] = hit
             return (hit[0] << 12 | (va & 0xFFF)) & self.mask
+        self.tlb_walks[c] += 1        # both cache levels missed: real walk
         a = (satp & ((1 << 44) - 1)) << 12
         for level in (2, 1, 0):
             idx = (va >> (12 + 9 * level)) & 0x1FF
@@ -414,6 +469,13 @@ class PySim:
             self.pc[c] = next_pc
             self.instret[c] += 1
             self.uticks[c] += 1
+            if self.trace_slots:
+                # commit-trace record: mirrors the jitted ring bit-for-
+                # bit (tick at retirement, pre-exec pc, raw instruction,
+                # privilege)
+                self.tracebuf[c][self.trace_n[c] % self.trace_slots] = \
+                    (self.ticks, pc, inst, self.priv[c])
+                self.trace_n[c] += 1
         except _Trap as t:
             self._trap(c, t.cause, pc, t.tval)
 

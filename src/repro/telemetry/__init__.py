@@ -1,0 +1,38 @@
+"""Out-of-band telemetry bridges (FireSim AutoCounter/TracerV-style).
+
+Profiling a FASE run must not perturb the timing FASE exists to
+validate: every introspection mechanism that rides the billed syscall
+path shows up in the golden ticks.  This package adds the out-of-band
+alternative — two bridges that harvest target-side state at chunk
+boundaries and emit it onto a dedicated low-priority **"telem" stream**
+(:class:`~repro.telemetry.stream.TelemStream`) with its own modelled
+bandwidth budget and drop-counting backpressure:
+
+  * :class:`~repro.telemetry.bridges.CounterBridge` — periodic per-hart
+    performance-counter frames (``htp.TELEM_COUNTERS``) plus host-known
+    link/session counters,
+  * :class:`~repro.telemetry.bridges.CommitTraceBridge` — per-hart
+    (tick, pc, inst, priv) commit records captured in a bounded ring in
+    the target carry and drained in bundled reads.
+
+Telemetry traffic is *timed* on the wire model (it occupies a
+configurable fraction of the link) but **never delays** Layer-A/Layer-B
+transactions and never touches the session's byte/stall accounting —
+golden ticks and traffic pins hold with bridges armed, which
+``tests/test_telemetry.py`` enforces.
+
+:class:`~repro.telemetry.bridges.TelemetryHub` packages both bridges
+behind one ``pump(now)`` surface that :class:`repro.core.runtime.\
+FaseRuntime` drives (``telemetry=`` constructor kwarg); captured commit
+traces feed :mod:`repro.telemetry.replay` — lockstep trace-driven
+conformance against PySim.
+"""
+from .stream import TELEM_STREAM, TelemStream
+from .bridges import CommitTraceBridge, CounterBridge, TelemetryHub
+from .replay import TraceDivergence, capture_commit_trace, replay_trace
+
+__all__ = [
+    "TELEM_STREAM", "TelemStream",
+    "CounterBridge", "CommitTraceBridge", "TelemetryHub",
+    "capture_commit_trace", "replay_trace", "TraceDivergence",
+]

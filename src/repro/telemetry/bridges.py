@@ -1,0 +1,184 @@
+"""The two out-of-band telemetry bridges and their hub.
+
+Both bridges follow the same discipline: harvest target-side state
+**host-side at chunk boundaries** with bundled reads (one
+``fetch_batch`` / one ``trace_drain`` device sync per pump, never
+per-element round trips), package it into fixed HTP telemetry frames
+(``CtrSample`` / ``TraceB``), and emit the frames on the session's
+:class:`~repro.telemetry.stream.TelemStream`.  A frame the lane drops
+is *lost* — counted, never retried — which is the drop-counting
+backpressure model of a real bridge FIFO.
+
+Counter taxonomy (``htp.TELEM_COUNTERS`` frame order):
+
+  * **architectural** — ``instret``, ``uticks``, ``stall_ticks``,
+    ``trace_n``: bit-identical between PySim and the jitted fast path
+    (pinned by ``tests/test_telemetry.py``);
+  * **backend model** — ``fetch_hits`` (fast-path fetch-block cache;
+    0 on PySim) and ``tlb_walks`` (PySim's host-side data-TLB walks;
+    0 on the jitted target, which walks every access);
+  * **host-known link/session counters** — appended to each sample
+    from ``SessionStats``/channel accounting at zero wire cost (the
+    host already owns them).
+"""
+from __future__ import annotations
+
+from ..core import htp
+from ..core.session import HtpTransaction
+from .stream import TelemStream
+
+
+class CounterBridge:
+    """Periodic per-hart performance-counter samples.
+
+    ``pump(now)`` emits at most one sample per call, and only once
+    ``interval_ticks`` have elapsed since the previous one — sampling
+    happens at chunk boundaries, so the interval is a floor, not an
+    exact period.  Each sample is one transaction (Tick + CtrSample per
+    hart) on the telem lane; a dropped sample is counted and lost.
+    """
+
+    def __init__(self, stream: TelemStream, interval_ticks: int = 100_000):
+        assert interval_ticks > 0
+        self.stream = stream
+        self.interval = interval_ticks
+        self.next_due = 0
+        self.samples: list[dict] = []
+        self.dropped_samples = 0
+
+    def pump(self, now: int, force: bool = False):
+        if not force and now < self.next_due:
+            return
+        self.next_due = now + self.interval
+        sess = self.stream.session
+        nc = sess.t.n_cores
+        txn = HtpTransaction().tick()
+        for c in range(nc):
+            txn.ctr_sample(c)
+        res = self.stream.submit(txn, now)
+        if res is None:
+            self.dropped_samples += 1
+            return
+        ch = sess.channel
+        self.samples.append({
+            "at": now,
+            "delivered": res.done,
+            "tick": res.values[0],
+            "cores": [dict(zip(htp.TELEM_COUNTERS, res.values[1 + c]))
+                      for c in range(nc)],
+            "session": {
+                "transactions": sess.stats.transactions,
+                "controller_cycles": sess.stats.controller_cycles,
+                "link_ticks": sess.stats.uart_ticks,
+                "wire_bytes": ch.total_bytes,
+            },
+        })
+
+    def report(self) -> dict:
+        return {
+            "interval_ticks": self.interval,
+            "samples": self.samples,
+            "dropped_samples": self.dropped_samples,
+        }
+
+
+class CommitTraceBridge:
+    """Per-hart commit-trace capture.
+
+    Arms the target's bounded ring (``trace_arm``); each ``pump`` drains
+    every hart in one bundled read and ships the surviving records as
+    fixed ``htp.TRACE_FRAME_RECORDS``-record ``TraceB`` frames on the
+    telem lane.  Loss is counted at both levels and never hidden:
+    ``ring_dropped`` (ring overwrote records between drains — derived
+    from the monotone produced-count, identically on both backends) and
+    ``frame_dropped`` (the lane's backpressure dropped a shipped frame,
+    losing its records).
+    """
+
+    def __init__(self, stream: TelemStream, slots: int = 4096):
+        self.stream = stream
+        self.slots = slots
+        t = stream.session.t
+        t.trace_arm(slots)
+        nc = t.n_cores
+        self.records: list[list] = [[] for _ in range(nc)]
+        self.ring_dropped = [0] * nc
+        self.frame_dropped = [0] * nc
+
+    def rearm(self):
+        """Re-arm capture on the (new) target behind the stream's
+        session — a migrated job's restored target starts unarmed."""
+        self.stream.session.t.trace_arm(self.slots)
+
+    def pump(self, now: int):
+        per = htp.TRACE_FRAME_RECORDS
+        for c, (recs, dropped) in enumerate(
+                self.stream.session.t.trace_drain()):
+            self.ring_dropped[c] += dropped
+            for i in range(0, len(recs), per):
+                frame = recs[i:i + per]
+                txn = HtpTransaction().trace_burst(c)
+                res = self.stream.submit(txn, now, values=[tuple(frame)])
+                if res is None:
+                    self.frame_dropped[c] += len(frame)
+                else:
+                    self.records[c].extend(frame)
+
+    def report(self) -> dict:
+        return {
+            "slots": self.slots,
+            "records": [len(r) for r in self.records],
+            "ring_dropped": list(self.ring_dropped),
+            "frame_dropped": list(self.frame_dropped),
+        }
+
+
+class TelemetryHub:
+    """Both bridges behind one pump/finish/report surface.
+
+    Built by :class:`repro.core.runtime.FaseRuntime` from its
+    ``telemetry=`` kwarg (a kwargs dict, or a ready hub); the runtime
+    pumps it after every target chunk and flushes it in ``finish`` —
+    so a drained record can never straddle a snapshot (the ring is not
+    checkpoint state).
+    """
+
+    def __init__(self, session, counters: bool = True,
+                 commit_trace: bool = False,
+                 interval_ticks: int = 100_000,
+                 bandwidth_frac: float = 0.1,
+                 trace_slots: int = 4096,
+                 backlog_ticks: int | None = 1 << 20):
+        self.stream = TelemStream(session, bandwidth_frac, backlog_ticks)
+        self.counters = CounterBridge(self.stream, interval_ticks) \
+            if counters else None
+        self.commit = CommitTraceBridge(self.stream, trace_slots) \
+            if commit_trace else None
+
+    def pump(self, now: int):
+        if self.counters is not None:
+            self.counters.pump(now)
+        if self.commit is not None:
+            self.commit.pump(now)
+
+    def finish(self, now: int):
+        """Final flush: one forced counter sample + a last ring drain."""
+        if self.counters is not None:
+            self.counters.pump(now, force=True)
+        if self.commit is not None:
+            self.commit.pump(now)
+
+    def rebind(self, session):
+        """Follow a runtime retarget (job migration) onto the new
+        session; commit capture re-arms on the new target."""
+        self.stream.rebind(session)
+        if self.commit is not None:
+            self.commit.rearm()
+
+    def report(self) -> dict:
+        rep = {"stream": self.stream.report()}
+        if self.counters is not None:
+            rep["counters"] = self.counters.report()
+        if self.commit is not None:
+            rep["commit_trace"] = self.commit.report()
+        return rep

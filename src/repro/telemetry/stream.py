@@ -1,0 +1,113 @@
+"""The dedicated low-priority "telem" stream.
+
+A :class:`TelemStream` is a side-band lane of one session's link: it
+shares the channel's *rate model* (a telemetry byte takes
+``1 / bandwidth_frac`` times the channel's per-byte time — the fraction
+of link bandwidth provisioned for telemetry) but keeps its **own**
+occupancy clock and its own byte counters.  It never touches
+
+  * ``channel.busy_until`` / ``total_bytes`` / ``bytes_by_cat`` (the
+    Layer-A/Layer-B wire accounting and the traffic pins),
+  * ``SessionStats`` (Table IV stall decomposition, host billing),
+  * the async engine's doorbell/wire state,
+
+so arming telemetry cannot move a golden tick by construction — the
+stream is *timed but non-perturbing*.  Backpressure is modelled by
+drop-counting: when the lane's backlog at submit time exceeds
+``max_backlog_ticks`` the frame is dropped (the bridge FIFO overflowed)
+and counted, exactly the failure mode a real out-of-band bridge has.
+
+Submitted frames are recorded into the session's hazard trace under a
+dedicated always-live ordering domain (``"telem"``, device-prefixed in
+a fleet) so the happens-before race detector sees telemetry reads
+against ordinary traffic — the telem lane is genuinely concurrent even
+on serial links, where ordinary transactions collapse onto the serial
+domain.
+"""
+from __future__ import annotations
+
+from math import ceil
+
+from ..core.session import TransactionResult
+
+#: ordering-domain / stream key of the telemetry lane
+TELEM_STREAM = "telem"
+
+
+class TelemStream:
+    """Side-band telemetry lane over one session's channel."""
+
+    def __init__(self, session, bandwidth_frac: float = 0.1,
+                 max_backlog_ticks: int | None = 1 << 20):
+        assert 0.0 < bandwidth_frac <= 1.0
+        assert session.t is not None, \
+            "telemetry needs a live target behind the session"
+        self.session = session
+        self.bandwidth_frac = bandwidth_frac
+        self.max_backlog_ticks = max_backlog_ticks  # None = lossless
+        self.busy_until = 0
+        self.frames = 0
+        self.dropped_frames = 0
+        self.bytes_total = 0
+        self.bytes_by_op: dict = {}
+
+    def rebind(self, session):
+        """Follow the runtime onto a new session (job migration); the
+        lane's occupancy clock and counters carry over."""
+        assert session.t is not None
+        self.session = session
+
+    def ticks_for_bytes(self, nbytes: int) -> int:
+        """Wire time of a telemetry payload on this lane: the channel's
+        rate scaled down to the telemetry bandwidth fraction."""
+        ch = self.session.channel
+        if not ch.enabled:
+            return 0
+        return ceil(ch.ticks_for_bytes(nbytes) / self.bandwidth_frac)
+
+    def submit(self, txn, at: int, values: list | None = None):
+        """Emit one telemetry frame transaction at tick ``at``.
+
+        Returns a :class:`TransactionResult` (completion tick on the
+        telem lane + per-request values), or ``None`` if the frame was
+        dropped by backpressure.  ``values`` pre-fills the per-request
+        responses (the commit-trace bridge drains host-side and ships
+        frames already filled); when omitted each request is applied
+        through the session's normal device half.
+        """
+        start = max(at, self.busy_until)
+        if self.max_backlog_ticks is not None and \
+                start - at > self.max_backlog_ticks:
+            self.dropped_frames += 1
+            return None
+        nbytes = txn.wire_bytes()
+        ch = self.session.channel
+        done = start + ch.latency_ticks + self.ticks_for_bytes(nbytes)
+        self.busy_until = done
+        self.frames += 1
+        self.bytes_total += nbytes
+        if values is None:
+            values = [self.session._apply(r, done) for r in txn.requests]
+        for r in txn.requests:
+            self.bytes_by_op[r.op] = \
+                self.bytes_by_op.get(r.op, 0) + r.wire_bytes()
+        result = TransactionResult(done=done,
+                                   ticks=[done] * len(txn.requests),
+                                   values=list(values))
+        tr = self.session.trace
+        if tr is not None:
+            dom = TELEM_STREAM if tr.device is None \
+                else (tr.device, TELEM_STREAM)
+            tr.trace.record(dom, txn, (), at, start, result,
+                            device=tr.device)
+        return result
+
+    def report(self) -> dict:
+        return {
+            "bandwidth_frac": self.bandwidth_frac,
+            "frames": self.frames,
+            "dropped_frames": self.dropped_frames,
+            "bytes": self.bytes_total,
+            "bytes_by_op": dict(self.bytes_by_op),
+            "busy_until": self.busy_until,
+        }

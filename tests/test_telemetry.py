@@ -1,0 +1,149 @@
+"""Out-of-band telemetry: non-perturbation pins + bridge conformance.
+
+The whole point of the telem side-band lane is that arming it changes
+*nothing* the paper measures: the golden ticks and the traffic pin must
+hold bit-for-bit with both bridges running.  On top of that the bridges
+themselves are differential surfaces — the architectural counters and
+the ring-drop accounting must be identical between PySim and the jitted
+fast path, and a captured commit trace must replay cleanly against the
+PySim reference (lockstep conformance, strictly stronger than end-state
+comparison).
+"""
+from benchmarks.common import run_workload
+from repro.core.workloads import graphgen
+
+# pinned independently of tests/test_golden_ticks.py on purpose — a
+# drift in either file's constants is a finding, not a merge artifact
+HELLO_UART_TICKS = 6_554_780
+BC_PCIE_TICKS = 775_078
+BC_PCIE_INSTRET = 11_876
+BC_PCIE_TRAFFIC = 24_681
+
+ARMED = dict(counters=True, commit_trace=True, interval_ticks=50_000,
+             trace_slots=256)
+
+
+def test_hello_uart_golden_with_bridges_armed():
+    """Both bridges on the starved UART lane: frames drop (the lane is
+    lossy by design) but the run's timing is untouched."""
+    rt, rep, _ = run_workload("hello", [], mode="fase", n_cores=1,
+                              mem=1 << 22, telemetry=dict(ARMED))
+    assert rep.ticks == HELLO_UART_TICKS
+    assert rep.stdout == b"hello from FASE target\nanswer 42\n"
+    tel = rep.telemetry
+    assert tel["stream"]["frames"] > 0
+    # 10% of a 921600-baud UART cannot carry the trace — the drops are
+    # counted, never hidden, and never borrowed from the main lane
+    assert tel["stream"]["dropped_frames"] > 0
+
+
+def test_bc_pcie_golden_and_traffic_with_bridges_armed():
+    g = graphgen.rmat(4, 4, weights=True)
+    rt, rep, _ = run_workload("bc", ["g.bin", "2", "1"], mode="fase",
+                              link="pcie", n_cores=2, mem=1 << 22,
+                              files={"g.bin": g}, telemetry=dict(ARMED))
+    assert rep.ticks == BC_PCIE_TICKS
+    assert sum(rep.instret) == BC_PCIE_INSTRET
+    # the traffic pin is the sharp check: telemetry bytes are timed on
+    # their own lane and must never appear in the channel accounting
+    assert rep.traffic_total == BC_PCIE_TRAFFIC
+    tel = rep.telemetry
+    assert tel["stream"]["frames"] > 0
+    assert tel["counters"]["samples"], "pcie lane must deliver samples"
+    assert sum(tel["commit_trace"]["records"]) > 0
+
+
+def test_oracle_armed_vs_unarmed_tick_identity():
+    """On the disabled channel the lane is free; armed == unarmed."""
+    _, plain, _ = run_workload("hello", [], mode="fase", n_cores=1,
+                               mem=1 << 22, link="oracle")
+    _, armed, _ = run_workload("hello", [], mode="fase", n_cores=1,
+                               mem=1 << 22, link="oracle",
+                               telemetry=dict(ARMED))
+    assert armed.ticks == plain.ticks
+    assert armed.traffic_total == plain.traffic_total
+    assert armed.telemetry["stream"]["dropped_frames"] == 0
+
+
+JAX_FAST = dict(fast_path=True, issue_width=8, block_words=16,
+                block_cache=True)
+
+
+def _final_sample(rep):
+    return rep.telemetry["counters"]["samples"][-1]
+
+
+def test_counter_identity_pysim_vs_jax_fast():
+    """The architectural counters (instret/uticks/stall_ticks/trace_n)
+    are bit-identical across backends at every sampling point; the
+    backend model counters (fetch_hits/tlb_walks) are exactly the two
+    allowed to differ."""
+    reps = {}
+    for target, opts in (("pysim", None), ("jax", JAX_FAST)):
+        _, rep, _ = run_workload(
+            "hello", [], mode="fase", n_cores=1, mem=1 << 22, link="pcie",
+            target=target, target_opts=opts,
+            telemetry=dict(counters=True, interval_ticks=20_000))
+        reps[target] = rep
+    sp, sj = _final_sample(reps["pysim"]), _final_sample(reps["jax"])
+    assert sp["tick"] == sj["tick"]
+    for k in ("instret", "uticks", "stall_ticks", "trace_n"):
+        assert sp["cores"][0][k] == sj["cores"][0][k], k
+    assert sp["cores"][0]["uticks"] > 0
+    assert sp["cores"][0]["stall_ticks"] > 0
+    # per-sample identity too, not just the endpoint
+    ticks_p = [s["tick"] for s in reps["pysim"].telemetry
+               ["counters"]["samples"]]
+    ticks_j = [s["tick"] for s in reps["jax"].telemetry
+               ["counters"]["samples"]]
+    assert ticks_p == ticks_j
+
+
+def test_ring_overflow_drop_accounting_identical():
+    """An 8-slot ring overflows between chunk-boundary drains; the
+    drop count is derived from the monotone produced-count and must be
+    identical on both backends (drain points are the same chunks)."""
+    drops, ticks = {}, {}
+    for target, opts in (("pysim", None), ("jax", JAX_FAST)):
+        rt, rep, _ = run_workload(
+            "hello", [], mode="fase", n_cores=1, mem=1 << 22, link="pcie",
+            target=target, target_opts=opts,
+            telemetry=dict(counters=False, commit_trace=True,
+                           trace_slots=8))
+        drops[target] = list(rt.telemetry.commit.ring_dropped)
+        ticks[target] = rep.ticks
+    assert ticks["pysim"] == ticks["jax"]
+    assert drops["pysim"] == drops["jax"]
+    assert sum(drops["pysim"]) > 0, "8 slots must overflow on hello"
+
+
+def test_trace_replay_conformance_bc():
+    """GAPBS bc captured on the jitted fast path replays divergence-free
+    against the PySim reference — full lockstep (tick, pc, inst, priv)
+    conformance over every retirement."""
+    from repro.telemetry import capture_commit_trace, replay_trace
+
+    g = graphgen.rmat(4, 4, weights=True)
+    recs, rep = capture_commit_trace(
+        "bc", ["g.bin", "1", "1"], target="jax", target_opts=JAX_FAST,
+        n_cores=1, files={"g.bin": g}, slots=1 << 15)
+    assert sum(len(r) for r in recs) == sum(rep.instret)
+    divergences = replay_trace(recs, "bc", ["g.bin", "1", "1"],
+                               n_cores=1, files={"g.bin": g},
+                               slots=1 << 15)
+    assert divergences == []
+
+
+def test_replay_flags_a_tampered_trace():
+    """The replay check has teeth: corrupt one record and it reports
+    exactly that divergence."""
+    from repro.telemetry import capture_commit_trace, replay_trace
+
+    recs, _ = capture_commit_trace("hello", [], n_cores=1)
+    assert recs[0]
+    idx = len(recs[0]) // 2
+    t, pc, inst, priv = recs[0][idx]
+    recs[0][idx] = (t, pc ^ 4, inst, priv)
+    div = replay_trace(recs, "hello", [], n_cores=1)
+    assert len(div) == 1
+    assert (div[0].core, div[0].index) == (0, idx)

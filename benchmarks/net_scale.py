@@ -1,0 +1,138 @@
+"""Inter-board fabric scale: gang makespan vs switch bandwidth × latency.
+
+The multi-board claim behind ``repro.core.net``: a gang-scheduled
+message-passing workload (1-D partitioned GAPBS bc with BSP halo
+exchange) has end-to-end ticks set by the modelled switch — per-port
+bandwidth, crossbar latency, credit flow control — not by the
+host<->device links.  Three panels:
+
+  * ``bandwidth`` — 2-board gang, port bandwidth swept; makespan must
+    fall monotonically as the links get fatter (credit-round-trip
+    bounds the floor);
+  * ``latency``   — 2-board gang, crossbar latency swept; makespan must
+    rise monotonically (each halo flit pays the propagation delay and
+    the credit return does too);
+  * ``boards``    — 2- vs 4-board gangs of the same graph at the
+    registry fabric config, with per-port counters (link_util,
+    credit_stalls) from ``Switch.report``.
+
+Artifact: ``results/net_scale.json``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import save_json
+from repro.configs.fase_rocket import FASE_FLEET_NET, net_kwargs
+from repro.core.net import GangJob, Switch
+from repro.core.fleet import FleetRuntime, Job
+from repro.core.target.cpu import CLOCK_HZ
+from repro.core.target.pysim import PySim
+from repro.core.workloads import graphgen
+
+N_CORES = 1
+MEM = 1 << 23
+
+#: BSP quantum / halo depth chosen so fabric time is visible against
+#: compute: ~40k-tick supersteps with 4-page halos put each exchange's
+#: delivery on the critical path of the next barrier.
+SUPERSTEP_TICKS = 40_000
+HALO_PAGES = 4
+
+
+def _gang(boards: int, graph: bytes, cfg: dict):
+    parts = graphgen.partition(graph, boards)
+    fleet = FleetRuntime(n_devices=boards,
+                         make_target=lambda: PySim(N_CORES, MEM),
+                         link="pcie", fabric=Switch(**net_kwargs(cfg)))
+    gang = GangJob([Job("bc", ["part.bin", "1", "1"],
+                        files={"part.bin": p}) for p in parts],
+                   superstep_ticks=SUPERSTEP_TICKS, halo_pages=HALO_PAGES)
+    return fleet, fleet.start_gang(gang)
+
+
+def _row(cfg: dict, boards: int, graph: bytes) -> dict:
+    fleet, rg = _gang(boards, graph, cfg)
+    rep = fleet.run_gang(rg)
+    fab = rep.fabric
+    return dict(
+        boards=boards,
+        gbits_per_s=cfg["net_gbits_per_s"],
+        latency_ticks=cfg["net_latency_ticks"],
+        makespan_ticks=rep.makespan_ticks,
+        makespan_s=rep.makespan_seconds,
+        supersteps=rep.supersteps, exchanges=rep.exchanges,
+        wait_ticks=rep.wait_ticks,
+        fabric_bytes=fab["total_bytes"], fabric_frames=fab["frames"],
+        credit_stalls=sum(p["credit_stalls"] for p in fab["ports"]),
+        link_util=max(p["link_util"] for p in fab["ports"]))
+
+
+def bandwidth_panel(graph: bytes, quick: bool) -> tuple[list, bool]:
+    sweep = (1.0, 16.0) if quick else (1.0, 4.0, 16.0, 64.0)
+    rows = []
+    for gbits in sweep:
+        cfg = {**FASE_FLEET_NET, "net_gbits_per_s": gbits}
+        r = _row(cfg, 2, graph)
+        rows.append(r)
+        print(f"net_scale,bc-gang2@{gbits}gbit,{r['makespan_ticks']},"
+              f"stalls={r['credit_stalls']} util={r['link_util']:.4f}",
+              flush=True)
+    mk = [r["makespan_ticks"] for r in rows]
+    mono = all(a >= b for a, b in zip(mk, mk[1:])) and mk[0] > mk[-1]
+    return rows, mono
+
+
+def latency_panel(graph: bytes, quick: bool) -> tuple[list, bool]:
+    sweep = (500, 2000) if quick else (100, 500, 2000, 8000)
+    rows = []
+    for lat in sweep:
+        cfg = {**FASE_FLEET_NET, "net_latency_ticks": lat}
+        r = _row(cfg, 2, graph)
+        rows.append(r)
+        print(f"net_scale,bc-gang2@lat{lat},{r['makespan_ticks']},"
+              f"wait={r['wait_ticks']}", flush=True)
+    mk = [r["makespan_ticks"] for r in rows]
+    mono = all(a <= b for a, b in zip(mk, mk[1:])) and mk[-1] > mk[0]
+    return rows, mono
+
+
+def boards_panel(graph: bytes, quick: bool) -> list:
+    rows = []
+    for boards in (2,) if quick else (2, 4):
+        fleet, rg = _gang(boards, graph, FASE_FLEET_NET)
+        rep = fleet.run_gang(rg)
+        rows.append(dict(
+            boards=boards, devices=rep.device_ids,
+            makespan_ticks=rep.makespan_ticks,
+            supersteps=rep.supersteps, exchanges=rep.exchanges,
+            member_ticks=[r.ticks for r in rep.reports],
+            ports=rep.fabric["ports"]))
+        print(f"net_scale,bc-gang{boards}@default,{rep.makespan_ticks},"
+              f"supersteps={rep.supersteps} exchanges={rep.exchanges}",
+              flush=True)
+    return rows
+
+
+def run(quick: bool = False):
+    graph = graphgen.rmat(4 if quick else 5, 4, seed=42, weights=False)
+    bw_rows, bw_mono = bandwidth_panel(graph, quick)
+    lat_rows, lat_mono = latency_panel(graph, quick)
+    boards = boards_panel(graph, quick)
+    out = dict(quick=quick, clock_hz=CLOCK_HZ,
+               superstep_ticks=SUPERSTEP_TICKS, halo_pages=HALO_PAGES,
+               bandwidth=bw_rows, bandwidth_monotone=bw_mono,
+               latency=lat_rows, latency_monotone=lat_mono,
+               boards=boards)
+    save_json("net_scale.json", out)
+    print(f"net_scale,summary,{int(bw_mono and lat_mono)},"
+          f"makespan monotone in bandwidth({bw_mono}) and "
+          f"latency({lat_mono})", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -13,9 +13,9 @@ def main() -> None:
     quick = "--quick" in sys.argv
     from . import (arg_prefetch, baud_sweep, coremark_accuracy,
                    fleet_scale, gapbs_accuracy, hfutex_bench, hillclimb,
-                   htp_vs_direct, migration, roofline, scale_sweep,
-                   serving_traffic, speedup, stall_attribution,
-                   stall_breakdown, target_speed)
+                   htp_vs_direct, migration, net_scale, roofline,
+                   scale_sweep, serving_traffic, speedup,
+                   stall_attribution, stall_breakdown, target_speed)
     modules = [
         ("target_speed", target_speed),
         ("htp_vs_direct", htp_vs_direct),
@@ -29,6 +29,7 @@ def main() -> None:
         ("serving_traffic", serving_traffic),
         ("arg_prefetch", arg_prefetch),
         ("fleet_scale", fleet_scale),
+        ("net_scale", net_scale),
         ("migration", migration),
         ("roofline", roofline),
         ("stall_attribution", stall_attribution),

@@ -19,6 +19,12 @@ needs: *where do the fleet's cycles actually go?*  A roofline-style
 per-device panel (modelled instr/s against wire bytes/instr) rides
 along, built from the same samples plus the device wire accounting.
 
+The fleet is fabric-attached (``repro.core.net``): a 2-member gang runs
+ahead of the solo mix, and a per-port fabric panel (``link_util``,
+``credit_stalls`` — the same counters the bridge stamps into every
+sample as ``sample["nic"]``) joins the per-device breakdown, so
+switch-port pressure is attributed alongside hart stalls.
+
 Artifact: ``results/stall_attribution.json``.
 """
 from __future__ import annotations
@@ -26,9 +32,11 @@ from __future__ import annotations
 import argparse
 
 from .common import save_json
-from repro.configs.fase_rocket import (FASE_FLEET, fleet_kwargs,
+from repro.configs.fase_rocket import (FASE_FLEET, FASE_FLEET_NET,
+                                       fleet_kwargs, net_kwargs,
                                        telemetry_kwargs)
 from repro.core.fleet import FleetRuntime, Job
+from repro.core.net import GangJob, Switch
 from repro.core.target.cpu import CLOCK_HZ
 from repro.core.target.pysim import PySim
 from repro.core.workloads import graphgen
@@ -45,7 +53,8 @@ def _fleet(quick: bool) -> FleetRuntime:
     if quick:
         tel["interval_ticks"] = 20_000
     return FleetRuntime(make_target=lambda: PySim(N_CORES, MEM),
-                        runtime_kwargs={"telemetry": tel}, **kw)
+                        runtime_kwargs={"telemetry": tel},
+                        fabric=Switch(**net_kwargs(FASE_FLEET_NET)), **kw)
 
 
 def _job_core_rows(result) -> list[dict]:
@@ -70,6 +79,13 @@ def _job_core_rows(result) -> list[dict]:
 def run(quick: bool = False):
     g = graphgen.rmat(4 if quick else 5, 8, weights=True)
     fr = _fleet(quick)
+    # a gang-scheduled multi-board job first: its halo traffic loads the
+    # switch ports whose counters the fabric panel attributes below
+    parts = graphgen.partition(
+        graphgen.rmat(4, 4, weights=False), 2)
+    gang = fr.run_gang(fr.start_gang(GangJob(
+        [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
+         for p in parts], superstep_ticks=40_000, halo_pages=4)))
     n_jobs = 4 if quick else 8
     for i in range(n_jobs):
         if i % 4 == 3:        # skew the mix: every 4th job is tiny
@@ -121,11 +137,31 @@ def run(quick: bool = False):
                  **res.report.telemetry["stream"])
             for res in rep.jobs]
 
+    # per-port fabric attribution: where the gang's exchange time went
+    # on the switch (same counters every telemetry sample carries)
+    fab = fr.fabric.report(horizon=gang.makespan_ticks)
+    fabric_rows = []
+    for p in fab["ports"]:
+        fabric_rows.append(dict(
+            device=p["port"], label=p["label"],
+            link_util=p["link_util"], credit_stalls=p["credit_stalls"],
+            credit_stall_ticks=p["credit_stall_ticks"],
+            tx_bytes=p["tx_bytes"], rx_bytes=p["rx_bytes"]))
+        print(f"stall_attribution,port{p['port']}/{p['label']},"
+              f"{p['credit_stall_ticks']},"
+              f"util={p['link_util']:.4f} stalls={p['credit_stalls']} "
+              f"tx={p['tx_bytes']}", flush=True)
+
     out = dict(quick=quick, clock_hz=CLOCK_HZ,
                n_devices=rep.n_devices, n_jobs=n_jobs,
                makespan_ticks=rep.makespan_ticks,
                breakdown=breakdown, per_job_cores=job_rows,
-               roofline=roofline, telem_lane=lane)
+               roofline=roofline, telem_lane=lane,
+               gang=dict(makespan_ticks=gang.makespan_ticks,
+                         supersteps=gang.supersteps,
+                         exchanges=gang.exchanges,
+                         wait_ticks=gang.wait_ticks),
+               fabric=fabric_rows)
     save_json("stall_attribution.json", out)
     devs = {r["device"] for r in breakdown}
     fleet_total = sum(r["ticks"] for r in breakdown)

@@ -47,7 +47,8 @@ _KIND = {"mem": "page-race", "reg": "reg-race", "csr": "csr-race",
          "tlb": "tlb-race", "icache": "fetch-race",
          "hfutex": "hfutex-race", "clock": "clock-race",
          "uticks": "clock-race", "vpage": "serve-race",
-         "vslot": "serve-race", "tracebuf": "telem-race"}
+         "vslot": "serve-race", "tracebuf": "telem-race",
+         "nicq": "net-race"}
 
 
 @dataclass(frozen=True)

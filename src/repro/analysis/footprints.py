@@ -81,6 +81,9 @@ ARG_SPECS: dict[str, tuple] = {
     "UTick": (),
     "CtrSample": (),
     "TraceB": (),
+    "NicTx": ("ppn",),
+    "NicRx": ("ppn", "words"),
+    "NicCtl": ("kind", "val"),
 }
 
 #: args-tuple indices the footprint/trace layer retains per opcode
@@ -186,6 +189,20 @@ def footprint(op: str, cpu: int, kargs: tuple, virtual: bool = False
         # commit-trace frame drain: consumes the hart's trace ring
         # (read + write — draining advances the ring's read cursor)
         return (("tracebuf", cpu),), (("tracebuf", cpu),)
+    if op == "NicTx":
+        # NIC egress DMA reads the whole source page out of board DRAM —
+        # a migration capture or guest write of that page HB-unordered
+        # with an in-flight egress frame is a fabric race
+        return (("mem", int(kargs[0]), None),), ()
+    if op == "NicRx":
+        # ingress DMA lands a whole fabric frame into board DRAM behind
+        # the cores' backs — conflicts with any local read of that page
+        return (), (("mem", int(kargs[0]), None),)
+    if op == "NicCtl":
+        # control doorbell (wake/shootdown) on the receiving NIC queue;
+        # the architectural effect travels as explicit HFutex/FlushTLB
+        # rows of the delivered transaction
+        return (), (("nicq", cpu),)
     raise KeyError(f"no footprint for HTP request {op!r}")
 
 

@@ -66,6 +66,9 @@ DEFAULT_SCAN = (
     "src/repro/core/fleet/device.py",
     "src/repro/core/fleet/router.py",
     "src/repro/core/fleet/runtime.py",
+    "src/repro/core/net/fabric.py",
+    "src/repro/core/net/nic.py",
+    "src/repro/core/net/gang.py",
     "src/repro/telemetry/stream.py",
     "src/repro/telemetry/bridges.py",
     "src/repro/telemetry/replay.py",

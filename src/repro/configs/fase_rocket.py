@@ -7,8 +7,9 @@ session knobs) and ``fleet_kwargs`` down to
 per-device link mix), so benchmarks can instantiate either straight
 from a registry entry.
 """
-from .registry import (FASE_FLEET, FASE_FLEET_PROVISION,  # noqa: F401
-                       FASE_ROCKET, FASE_ROCKET_PCIE)
+from .registry import (FASE_FLEET, FASE_FLEET_NET,        # noqa: F401
+                       FASE_FLEET_PROVISION, FASE_ROCKET,
+                       FASE_ROCKET_PCIE)
 
 CONFIG = FASE_ROCKET
 
@@ -50,6 +51,21 @@ def telemetry_kwargs(cfg: dict = FASE_ROCKET) -> dict:
     inside ``FleetRuntime``'s ``runtime_kwargs``) to arm the bridges
     with the config's provisioned lane."""
     return {new: cfg[old] for old, new in _TELEM_RENAMED.items()
+            if old in cfg}
+
+
+_NET_RENAMED = {"net_gbits_per_s": "gbits_per_s",
+                "net_latency_ticks": "latency_ticks",
+                "net_flit_bytes": "flit_bytes",
+                "net_header_bytes": "header_bytes",
+                "net_credits": "credits"}
+
+
+def net_kwargs(cfg: dict = FASE_FLEET_NET) -> dict:
+    """Keyword surface of :class:`~repro.core.net.Switch` from a registry
+    target config — build the fabric as ``Switch(**net_kwargs(cfg))``
+    and pass it to ``FleetRuntime(fabric=...)``."""
+    return {new: cfg[old] for old, new in _NET_RENAMED.items()
             if old in cfg}
 
 

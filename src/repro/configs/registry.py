@@ -120,6 +120,17 @@ FASE_FLEET_PROVISION = {**FASE_FLEET, "n_devices": 2,
                         "placement": "least_loaded",
                         "provision_us": 5_000.0}
 
+# fabric-attached fleet (repro.core.net): the net_* knobs size the
+# modelled inter-board switch — per-port bandwidth, crossbar propagation
+# latency (target ticks), flit/header framing and ingress credits per
+# port.  ``fase_rocket.net_kwargs`` filters them into the keyword
+# surface of repro.core.net.Switch; pass the switch as
+# ``FleetRuntime(fabric=...)`` to attach a NicEndpoint per device and
+# enable gang scheduling (benchmarks/net_scale.py sweeps these knobs).
+FASE_FLEET_NET = {**FASE_FLEET, "net_gbits_per_s": 16.0,
+                  "net_latency_ticks": 500, "net_flit_bytes": 64,
+                  "net_header_bytes": 16, "net_credits": 8}
+
 
 def get(name: str) -> ModelConfig:
     return CONFIGS[name]

@@ -43,6 +43,13 @@ paused job between boards by shipping an HTP-captured checkpoint
 provision latency and downtime all land in the
 :class:`~repro.core.fleet.runtime.MigrationReport`
 (``benchmarks/migration.py``).
+
+With a modelled interconnect attached (``FleetRuntime(fabric=Switch())``,
+:mod:`repro.core.net`) devices stop being islands: every board gets a
+:class:`~repro.core.net.NicEndpoint` on an adjacent switch port and one
+:class:`~repro.core.net.GangJob` can span N boards, with shared pages,
+remote hfutex wakes and cross-device TLB shootdowns carried on the
+fabric instead of the host router (``benchmarks/net_scale.py``).
 """
 from .device import Device, DeviceStats                     # noqa: F401
 from .placement import (POLICIES, AffinityPolicy,           # noqa: F401

@@ -80,6 +80,11 @@ class Device:
         self.label = label or f"dev{device_id}@{link}"
         self.stats = DeviceStats()
         self._session: HtpSession | None = None
+        # fabric attachment (repro.core.net.NicEndpoint) — set by the
+        # endpoint itself when a FleetRuntime carries a switch; None on
+        # island devices.  Propagated onto every queue pair so the
+        # telemetry counter bridge can surface per-port fabric counters.
+        self.nic = None
         # analysis trace (repro.analysis.trace.HtpTrace) armed fleet-wide
         # by attach_trace; every queue pair this device provisions feeds
         # it under a (device_id, stream)-prefixed ordering domain
@@ -135,6 +140,7 @@ class Device:
             self._session.trace = TraceRecorder(
                 self.trace, session_is_serial(self._session),
                 device=self.id)
+        self._session.nic = self.nic
         return self._session
 
     @property

@@ -131,7 +131,8 @@ class FleetRuntime:
                  session: str = "async", queue_depth: int = 8,
                  coalesce_ticks: int = 50, hfutex: bool = True,
                  provision_us: float = 0.0,
-                 runtime_kwargs: dict | None = None):
+                 runtime_kwargs: dict | None = None,
+                 fabric=None):
         if devices is None:
             assert make_target is not None, \
                 "need make_target (device factory) or explicit devices"
@@ -148,6 +149,18 @@ class FleetRuntime:
         self.runtime_kwargs = dict(runtime_kwargs or {})
         self.queue: list[Job] = []
         self._next_id = 0
+        # optional modelled interconnect (repro.core.net.Switch): every
+        # device gets a NicEndpoint on consecutive — hence adjacent —
+        # switch ports, in fleet order.  Idle NICs charge nothing, so a
+        # fabric-attached fleet running only solo jobs stays
+        # tick-identical to an island fleet.
+        self.fabric = fabric
+        if fabric is not None:
+            from ..net import NicEndpoint   # net sits beside fleet
+            for d in self.devices:
+                if d.nic is None:
+                    NicEndpoint(d, fabric)
+        self._next_gang = 0
 
     # -- submission ------------------------------------------------------
     def submit(self, job: Job, replicas: int = 1) -> list[Job]:
@@ -202,10 +215,41 @@ class FleetRuntime:
         """Run one job on one device (fresh queue pair, full runtime)."""
         return self.finish_job(self.start_job(job, device))
 
+    # -- gang scheduling (requires a fabric) -----------------------------
+    def start_gang(self, gang):
+        """Place a :class:`~repro.core.net.GangJob` on a contiguous run
+        of devices — adjacent switch ports — and load every member.
+        Returns the :class:`~repro.core.net.RunningGang` handle."""
+        from ..net import RunningGang, place_gang
+        assert self.fabric is not None, "gang scheduling needs fabric="
+        for j in gang.jobs:
+            if j.job_id < 0:
+                j.job_id = self._next_id
+                self._next_id += 1
+        if gang.gang_id < 0:
+            gang.gang_id = self._next_gang
+            self._next_gang += 1
+        devs = place_gang(self, len(gang.jobs))
+        handles = [self.start_job(j, d) for j, d in zip(gang.jobs, devs)]
+        return RunningGang(gang, handles)
+
+    def run_gang(self, rg):
+        """Drive a placed gang to completion (superstep quanta + fabric
+        halo exchanges); returns the :class:`~repro.core.net.GangReport`."""
+        from ..net import run_gang as _run
+        return _run(self, rg)
+
+    def migrate_gang(self, rg, dst_start: int) -> list:
+        """Rebalance a whole gang onto the contiguous window starting at
+        device index ``dst_start``, via the per-member pre-copy path,
+        NIC-fenced.  Returns the per-member migration reports."""
+        from ..net import migrate_gang as _mig
+        return _mig(self, rg, dst_start)
+
     # -- checkpoint / migration ------------------------------------------
     def checkpoint(self, handle: RunningJob,
                    base: "snapmod.TargetSnapshot | None" = None,
-                   advisory: bool = False):
+                   advisory: bool = False, deps: tuple = ()):
         """Checkpoint the (paused) job through its device's own queue
         pair — the capture traffic serialises on the source link.  The
         page set is the runtime's allocator view (every referenced
@@ -217,7 +261,7 @@ class FleetRuntime:
         rt = handle.runtime
         return snapmod.capture(rt.session, at=rt.target.get_ticks(),
                                pages=sorted(rt.alloc.refcnt), base=base,
-                               advisory=advisory)
+                               advisory=advisory, deps=deps)
 
     def prepare_migration(self, handle: RunningJob, dst: Device):
         """Pre-copy: provision ``dst`` and ship a full base checkpoint
@@ -232,8 +276,8 @@ class FleetRuntime:
         return snap
 
     def migrate(self, handle: RunningJob, dst: Device,
-                base: "snapmod.TargetSnapshot | None" = None
-                ) -> MigrationReport:
+                base: "snapmod.TargetSnapshot | None" = None,
+                deps: tuple = ()) -> MigrationReport:
         """Live-migrate a paused job: checkpoint on the source (billed
         on its link), re-image the destination (billed ``provision_us``
         when the board carries a different image), restore over the
@@ -246,7 +290,10 @@ class FleetRuntime:
         assert dst is not src, "migration needs a distinct destination"
         t0 = rt.target.get_ticks()
         src_b0 = rt.session.channel.total_bytes
-        snap, t1 = self.checkpoint(handle, base=base)
+        # ``deps`` fences the capture behind in-flight out-of-band work
+        # (a gang member's newest NIC frame: a credit-starved flit still
+        # draining into this board must land before its page is read)
+        snap, t1 = self.checkpoint(handle, base=base, deps=deps)
         src_bytes = rt.session.channel.total_bytes - src_b0
         # the span this board actually hosted, incl. the capture stall
         src.stats.busy_ticks += max(0, t1 - handle.mark)

@@ -115,6 +115,23 @@ _add("TraceB", "telem", 2, 2 + WORD + TRACE_FRAME_RECORDS * 4 * WORD,
      _REG + TRACE_FRAME_RECORDS * (_INJ + _REG))
 
 # ---------------------------------------------------------------------------
+# Inter-board NIC frames (repro.core.net).  These requests never cross the
+# host link: a NicEndpoint hands them to the modelled switch fabric, which
+# charges their wire size as flits on the source/destination *ports*
+# (serialisation + propagation + credit stalls) instead of on the session
+# channel.  NicTx DMAs one page out of board DRAM into the NIC egress FIFO
+# (PageR-style loop FSM); NicRx drains one ingress frame into a DRAM page
+# (PageW-style); NicCtl is a small control frame — remote hfutex wake or
+# TLB-shootdown doorbell — whose architectural effect is delivered as an
+# explicit HFutex/FlushTLB request in the receive transaction.
+# ---------------------------------------------------------------------------
+_add("NicTx", "net", 2 + WORD, PAGE,
+     _REG + PAGE_WORDS * (_INJ + _REG))
+_add("NicRx", "net", 2 + WORD + PAGE, 0,
+     _REG + PAGE_WORDS * (_INJ + _REG))
+_add("NicCtl", "net", 2 + WORD + 1, 0, 2)
+
+# ---------------------------------------------------------------------------
 # Direct per-port baseline (no HTP consolidation).  Each injected
 # instruction is shipped as an individual UART message (opcode + 4-byte
 # instruction + ack), each Reg read/write likewise (opcode + idx + 8-byte
@@ -156,6 +173,11 @@ DIRECT_BYTES: dict[str, int] = {
                                         + DIRECT_REGR_BYTES),
     "TraceB": TRACE_FRAME_RECORDS * 4 * (DIRECT_INJ_BYTES
                                          + DIRECT_REGR_BYTES),
+    # no NIC loop FSM in direct mode: the host reads/writes the page
+    # wordwise and pokes the doorbell as a RegW
+    "NicTx": PAGE_WORDS * (DIRECT_INJ_BYTES + DIRECT_REGR_BYTES) + _LI,
+    "NicRx": PAGE_WORDS * (DIRECT_REGW_BYTES + DIRECT_INJ_BYTES) + _LI,
+    "NicCtl": DIRECT_REGW_BYTES + _LI,
 }
 
 
@@ -174,7 +196,8 @@ def payload_bytes(name: str) -> int:
             "PageS": WORD, "PageCP": 0, "FlushTLB": 0, "SyncI": 0,
             "HFutex": WORD,
             "CtrSample": len(TELEM_COUNTERS) * WORD,
-            "TraceB": TRACE_FRAME_RECORDS * 4 * WORD}[name]
+            "TraceB": TRACE_FRAME_RECORDS * 4 * WORD,
+            "NicTx": PAGE, "NicRx": PAGE, "NicCtl": WORD}[name]
 
 
 def page_hash(words) -> int:

@@ -246,6 +246,14 @@ class VirtualMemory:
                                   if c != cpu)
         return t
 
+    def shootdown_delivered(self, cpus) -> None:
+        """Remote-shootdown routing (fabric path): the given cores'
+        owed TLB flushes were just delivered out-of-band — a gang
+        exchange carries them as ``FlushTLB`` rows of the NIC receive
+        transaction over the modelled switch — so the lazy host-link
+        flush at their next trap is no longer owed."""
+        self.pending_flush.difference_update(cpus)
+
     def set_brk(self, new_brk: int, cpu: int, at: int) -> tuple[int, int]:
         if new_brk == 0 or new_brk < self.brk_base:
             return self.brk, at

@@ -166,6 +166,19 @@ class HtpTransaction:
         (telemetry stream; fixed ``htp.TRACE_FRAME_RECORDS`` records)."""
         return self.add(HtpRequest("TraceB", cpu))
 
+    def nic_tx(self, cpu, ppn, category="nic"):
+        """DMA one page out of board DRAM into the NIC egress FIFO
+        (fabric frame — timed on the switch port, never the host link)."""
+        return self.add(HtpRequest("NicTx", cpu, (ppn,), category))
+
+    def nic_rx(self, cpu, ppn, words, category="nic"):
+        """Drain one ingress fabric frame into a DRAM page."""
+        return self.add(HtpRequest("NicRx", cpu, (ppn, words), category))
+
+    def nic_ctl(self, cpu, kind, val=0, category="nic"):
+        """Small fabric control frame (remote wake / shootdown doorbell)."""
+        return self.add(HtpRequest("NicCtl", cpu, (kind, val), category))
+
     # -- wire size -------------------------------------------------------
     def wire_bytes(self, direct: bool = False) -> int:
         return sum(r.wire_bytes(direct) for r in self.requests)
@@ -356,7 +369,7 @@ class HtpSession:
                 dirty.add(("csr", cpu, a[0]))
             elif op == "MemW":
                 dirty.add(("mem", a[0] >> 3))
-            elif op in ("PageS", "PageW"):
+            elif op in ("PageS", "PageW", "NicRx"):
                 dirty.add(("page", a[0]))
             elif op == "PageCP":
                 dirty.add(("page", a[1]))
@@ -461,6 +474,12 @@ class HtpSession:
             # the telemetry bridge normally drains host-side and ships
             # the frames pre-filled — this path serves direct submission
             return t.trace_drain(cpu)
+        elif op == "NicTx":
+            return t.page_read(a[0])      # page words into the egress FIFO
+        elif op == "NicRx":
+            t.page_write(a[0], a[1])
+        elif op == "NicCtl":
+            pass   # doorbell only: effects ride as HFutex/FlushTLB rows
         else:
             raise KeyError(f"unknown HTP request {op!r}")
         return None

@@ -44,3 +44,42 @@ def rmat(scale: int, avg_degree: int = 8, seed: int = 42,
         w = (rng.integers(1, 16, size=m)).astype(np.uint64)
         parts.append(w.tobytes())
     return b"".join(parts)
+
+
+def partition(data: bytes, n_parts: int) -> list[bytes]:
+    """1-D vertex partition of one serialised graph into ``n_parts``
+    subgraphs (contiguous vertex ranges, intra-partition edges kept and
+    reindexed to local ids, cut edges dropped) — the per-board inputs of
+    a gang-scheduled multi-node GAPBS run.  Deterministic: same bytes in,
+    same partitions out."""
+    assert n_parts >= 1
+    hdr = np.frombuffer(data[:24], dtype=np.uint64)
+    n, m, has_w = int(hdr[0]), int(hdr[1]), int(hdr[2])
+    off = 24
+    rowptr = np.frombuffer(data[off:off + 8 * (n + 1)], dtype=np.uint64)
+    off += 8 * (n + 1)
+    colidx = np.frombuffer(data[off:off + 8 * m], dtype=np.uint64)
+    off += 8 * m
+    w = np.frombuffer(data[off:off + 8 * m], dtype=np.uint64) \
+        if has_w else None
+    deg = np.diff(rowptr.astype(np.int64))
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    out = []
+    bounds = [n * p // n_parts for p in range(n_parts + 1)]
+    for p in range(n_parts):
+        lo, hi = bounds[p], bounds[p + 1]
+        nn = hi - lo
+        keep = (src >= lo) & (src < hi) & \
+            (colidx.astype(np.int64) >= lo) & (colidx.astype(np.int64) < hi)
+        u = src[keep] - lo
+        v = colidx[keep].astype(np.int64) - lo
+        mm = len(u)
+        rp = np.zeros(nn + 1, dtype=np.uint64)
+        np.add.at(rp, u + 1, 1)
+        rp = np.cumsum(rp).astype(np.uint64)
+        parts = [np.array([nn, mm, has_w], dtype=np.uint64).tobytes(),
+                 rp.tobytes(), v.astype(np.uint64).tobytes()]
+        if has_w:
+            parts.append(w[keep].tobytes())
+        out.append(b"".join(parts))
+    return out

@@ -60,7 +60,7 @@ class CounterBridge:
             self.dropped_samples += 1
             return
         ch = sess.channel
-        self.samples.append({
+        sample = {
             "at": now,
             "delivered": res.done,
             "tick": res.values[0],
@@ -72,7 +72,14 @@ class CounterBridge:
                 "link_ticks": sess.stats.uart_ticks,
                 "wire_bytes": ch.total_bytes,
             },
-        })
+        }
+        # fabric-attached device (repro.core.net): the board's switch
+        # port counters are host-known state like SessionStats — zero
+        # wire cost, per-port link_util / credit_stalls in every sample
+        nic = getattr(sess, "nic", None)
+        if nic is not None:
+            sample["nic"] = nic.port.counters(horizon=now)
+        self.samples.append(sample)
 
     def report(self) -> dict:
         return {

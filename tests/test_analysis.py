@@ -74,6 +74,15 @@ def test_footprint_virtual_requests_use_serving_namespace():
     assert reads == () and writes == (("vslot", 4),)
 
 
+def test_footprint_nic_ops_touch_dram_and_doorbells():
+    reads, writes = footprint("NicTx", 0, (5,))
+    assert reads == (("mem", 5, None),) and writes == ()
+    reads, writes = footprint("NicRx", 0, (7, (1, 2)))
+    assert reads == () and writes == (("mem", 7, None),)
+    reads, writes = footprint("NicCtl", 1, ("shootdown", 0))
+    assert reads == () and writes == (("nicq", 1),)
+
+
 # ---------------------------------------------------------------------------
 # linter
 # ---------------------------------------------------------------------------
@@ -317,6 +326,67 @@ def test_seeded_fleet_race_token_fence_and_device_namespacing():
                   stream=(0, 1), deps=(r1.token,))
     assert detect(trace2) == []
     assert detect(trace2, time_fences=False) == []
+
+
+def _fabric_pair(n_cores=2, **switch_kw):
+    """Two fleet devices on one switch, both provisioned."""
+    from repro.core.fleet import Device
+    from repro.core.net import NicEndpoint, Switch
+    sw = Switch(**switch_kw)
+    devs = [Device(i, lambda: PySim(n_cores, 1 << 20), link="pcie")
+            for i in range(2)]
+    nics = [NicEndpoint(d, sw) for d in devs]
+    return nics, devs[0].provision(), devs[1].provision()
+
+
+@pytest.mark.hazard
+def test_seeded_fabric_race_remote_shootdown_vs_local_fetch():
+    """A remote TLB shootdown delivered off the fabric while the
+    receiving board has an in-flight Redirect on the same hart: the
+    flush can land before or after the fetch translates — tlb-race.
+    The same delivery fenced on the redirect's token is clean (and by
+    the token edge, not modelled time)."""
+    nics, _, s1 = _fabric_pair()
+    trace = attach_trace(s1)
+    r = s1.submit(HtpTransaction().redirect(1, 0x2000), 0, stream=1)
+    nics[1].deliver(HtpTransaction().flush_tlb(1, "shootdown"), at=1)
+    found = detect(trace)
+    assert summarize(found) == {"tlb-race": 1}
+
+    nics, _, s1 = _fabric_pair()
+    trace = attach_trace(s1)
+    r = s1.submit(HtpTransaction().redirect(1, 0x2000), 0, stream=1)
+    nics[1].deliver(HtpTransaction().flush_tlb(1, "shootdown"), at=1,
+                    deps=(r.token,))
+    assert detect(trace) == []
+    assert detect(trace, time_fences=False) == []
+
+
+@pytest.mark.hazard
+def test_seeded_fabric_race_starved_flit_vs_migration_capture():
+    """A credit-starved frame still draining into the destination board
+    while a migration capture reads the same DRAM: the NicRx lands
+    mid-capture (its delivery tick sits inside the capture window), so
+    the captured page is indeterminate — page-race on the mailbox ppn.
+    Token-fencing the capture on the delivery (``migrate(...,
+    deps=(nic.last_token,))``, as ``migrate_gang`` does) is clean."""
+    def seed(deps=()):
+        nics, s0, s1 = _fabric_pair(n_cores=1, credits=2,
+                                    latency_ticks=100)
+        s0.t.page_set(3, 7)
+        trace = attach_trace(s1)
+        res = nics[0].push_pages(nics[1], [(3, 7)], at=0)
+        snapshot.capture(s1, at=0, pages=list(range(16)),
+                         deps=(res.token,) if deps else ())
+        assert nics[0].port.credit_stalls > 0      # genuinely starved
+        return trace
+
+    found = detect(seed())
+    assert any(f.kind == "page-race" and f.loc == ("mem", 7)
+               for f in found)
+    fenced = seed(deps=True)
+    assert detect(fenced) == []
+    assert detect(fenced, time_fences=False) == []
 
 
 @pytest.mark.hazard

@@ -27,6 +27,16 @@ HELLO_UART_TICKS = 6_554_780
 BC_PCIE_TICKS = 775_078
 BC_PCIE_INSTRET = 11_876
 BC_PCIE_TRAFFIC = 24_681
+#: 2-board gang over the switch fabric: 1-D partitioned bc on
+#: rmat(4,4), one core per board, PCIe queue pairs, registry fabric
+#: config (16 Gbit ports, 500-tick crossbar), 40k-tick supersteps with
+#: 4-page halos.  Pins the whole core/net stack: flit/credit timing,
+#: NIC push_pages, the BSP barrier and the resume-floor arithmetic.
+GANG_BC_MAKESPAN = 526_792
+GANG_BC_SUPERSTEPS = 6
+GANG_BC_EXCHANGES = 10
+GANG_BC_INSTRET = 4_319
+GANG_BC_FABRIC_BYTES = 164_460
 
 TARGETS = [
     pytest.param("pysim", None, id="pysim"),
@@ -53,6 +63,35 @@ def test_bc_pcie_golden(target, opts):
     assert rep.ticks == BC_PCIE_TICKS
     assert sum(rep.instret) == BC_PCIE_INSTRET
     assert rep.traffic_total == BC_PCIE_TRAFFIC
+
+
+@pytest.mark.parametrize("target,opts", TARGETS)
+def test_gang_bc_fabric_golden(target, opts):
+    """Multi-board pin: a 2-device gang's end-to-end ticks over the
+    modelled switch, identical on every backend."""
+    from repro.configs.fase_rocket import net_kwargs
+    from repro.core.fleet import FleetRuntime, Job
+    from repro.core.net import GangJob, Switch
+
+    def make_target():
+        if target == "pysim":
+            from repro.core.target.pysim import PySim
+            return PySim(1, 1 << 22)
+        from repro.core.interface import JaxTarget
+        return JaxTarget(1, 1 << 22, **(opts or {}))
+
+    parts = graphgen.partition(graphgen.rmat(4, 4, weights=False), 2)
+    fleet = FleetRuntime(n_devices=2, make_target=make_target,
+                         link="pcie", fabric=Switch(**net_kwargs()))
+    rg = fleet.start_gang(GangJob(
+        [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
+         for p in parts], superstep_ticks=40_000, halo_pages=4))
+    rep = fleet.run_gang(rg)
+    assert rep.makespan_ticks == GANG_BC_MAKESPAN
+    assert rep.supersteps == GANG_BC_SUPERSTEPS
+    assert rep.exchanges == GANG_BC_EXCHANGES
+    assert sum(sum(r.instret) for r in rep.reports) == GANG_BC_INSTRET
+    assert rep.fabric["total_bytes"] == GANG_BC_FABRIC_BYTES
 
 
 def test_registry_target_kwargs_drive_the_interpreter():

@@ -1,0 +1,253 @@
+"""Inter-board switch fabric (repro.core.net): flit/credit timing of the
+modelled switch, NIC endpoints carrying cross-device traffic off the
+host links, gang scheduling (placement, BSP halo exchange, gang
+migration) and the fabric-vs-island tick-identity contract."""
+import pytest
+
+from repro.configs.fase_rocket import FASE_FLEET_NET, net_kwargs
+from repro.core.fleet import FleetRuntime, Job
+from repro.core.net import (GangJob, NicEndpoint, Switch, migrate_gang,
+                            place_gang)
+from repro.core.session import HtpTransaction
+from repro.core.target.pysim import PySim
+from repro.core.workloads import graphgen
+
+N_CORES = 1
+MEM = 1 << 23
+
+
+def _fleet(n, fabric=None, **kw):
+    return FleetRuntime(n_devices=n,
+                        make_target=lambda: PySim(N_CORES, MEM),
+                        link="pcie", fabric=fabric, **kw)
+
+
+def _gang_fleet(boards, graph=None, fabric=None, superstep=40_000,
+                halo=4):
+    g = graph if graph is not None \
+        else graphgen.rmat(4, 4, seed=42, weights=False)
+    parts = graphgen.partition(g, boards)
+    fleet = _fleet(boards, fabric=fabric or Switch(**net_kwargs()))
+    gang = GangJob([Job("bc", ["part.bin", "1", "1"],
+                        files={"part.bin": p}) for p in parts],
+                   superstep_ticks=superstep, halo_pages=halo)
+    return fleet, fleet.start_gang(gang)
+
+
+# ---------------------------------------------------------------------------
+# switch: flit framing, credit flow control, bandwidth/latency timing
+# ---------------------------------------------------------------------------
+def test_flit_segmentation_and_framing():
+    sw = Switch(flit_bytes=64, header_bytes=16)
+    flits = sw.flits_of(4096, "data")
+    # 16B header rides the first flit: payload capacity 48B then 64B
+    assert sum(f.nbytes for f in flits) == 4096 + 16
+    assert all(f.nbytes <= 64 for f in flits)
+    assert [f.seq for f in flits] == list(range(len(flits)))
+
+
+def test_switch_transfer_monotone_in_bandwidth_and_latency():
+    def delivered(gbits, lat):
+        sw = Switch(gbits_per_s=gbits, latency_ticks=lat)
+        a, b = sw.connect("a"), sw.connect("b")
+        out = 0
+        for i in range(4):          # a frame train keeps ports busy
+            out = sw.transfer(a, b, 4096, at=0, kind="data")
+        return out
+    bw = [delivered(g, 500) for g in (1, 4, 16, 64)]
+    assert all(x >= y for x, y in zip(bw, bw[1:])) and bw[0] > bw[-1]
+    lat = [delivered(16, l) for l in (100, 500, 2000)]
+    assert all(x <= y for x, y in zip(lat, lat[1:])) and lat[-1] > lat[0]
+
+
+def test_switch_credit_starvation_counted():
+    """2 ingress credits against a long frame: the source must stall for
+    credit returns (which pay the crossbar latency both ways)."""
+    starved = Switch(credits=2, latency_ticks=1000)
+    a, b = starved.connect("a"), starved.connect("b")
+    done_starved = starved.transfer(a, b, 1 << 14, at=0, kind="data")
+    assert a.credit_stalls > 0 and a.credit_stall_ticks > 0
+    rich = Switch(credits=1 << 10, latency_ticks=1000)
+    c, d = rich.connect("c"), rich.connect("d")
+    done_rich = rich.transfer(c, d, 1 << 14, at=0, kind="data")
+    assert c.credit_stalls == 0
+    assert done_starved > done_rich
+
+
+def test_port_counters_and_report():
+    sw = Switch()
+    a, b = sw.connect("a"), sw.connect("b")
+    sw.transfer(a, b, 4096, at=0, kind="data")
+    assert a.tx_bytes == b.rx_bytes > 4096      # header overhead counted
+    assert a.tx_flits == b.rx_flits == len(sw.flits_of(4096, "data"))
+    rep = sw.report(horizon=100_000)
+    assert rep["frames"] == 1 and rep["total_bytes"] == 4096
+    assert a.tx_bytes == 4096 + sw.header_bytes
+    pa = rep["ports"][0]
+    assert pa["label"] == "a" and 0 < pa["link_util"] <= 1
+    assert sw.adjacent(a, b)
+
+
+def test_place_gang_prefers_least_loaded_contiguous_window():
+    fleet = _fleet(4, fabric=Switch())
+    fleet.devices[0].stats.busy_ticks = 500   # every window containing
+    fleet.devices[1].stats.busy_ticks = 300   # dev 0/1 is busier
+    devs = place_gang(fleet, 2)
+    assert [d.id for d in devs] == [2, 3]
+    assert fleet.fabric.adjacent(devs[0].nic.port, devs[1].nic.port)
+
+
+# ---------------------------------------------------------------------------
+# NIC endpoint: content transfer, host-link isolation
+# ---------------------------------------------------------------------------
+def test_nic_push_pages_moves_dram_content_off_the_host_link():
+    fleet = _fleet(2, fabric=Switch(**net_kwargs()))
+    d0, d1 = fleet.devices
+    s0, s1 = d0.provision("a"), d1.provision("b")
+    words = tuple((i * 2654435761) & 0xFFFFFFFFFFFFFFFF
+                  for i in range(512))
+    w = s0.submit(HtpTransaction().page_write(0, 3, words), 0)
+    b0, b1 = s0.channel.total_bytes, s1.channel.total_bytes
+    res = d0.nic.push_pages(d1.nic, [(3, 7)], at=w.done,
+                            shootdown=(0,), wake=(0,))
+    # the transfer crossed no host link: both channel counters froze
+    assert s0.channel.total_bytes == b0
+    assert s1.channel.total_bytes == b1
+    assert fleet.fabric.total_bytes > 4096
+    assert d0.nic.frames_tx == 1 and d1.nic.frames_rx == 1
+    assert "NicTx" in d0.nic.bytes_by_op
+    assert res.done > w.done
+    # content really crossed: the receiver's DRAM now holds the page
+    got = s1.submit(HtpTransaction().page_read(0, 7), res.done)
+    assert tuple(got.values[0]) == words
+
+
+def test_fabric_attached_fleet_tick_identical_when_nics_idle():
+    """The switch-disabled contract: solo jobs on a fabric-attached
+    fleet are tick-identical to an island fleet (idle NICs are free)."""
+    g = graphgen.rmat(4, 8, weights=True)
+    reports = []
+    for fabric in (None, Switch(**net_kwargs())):
+        fr = _fleet(2, fabric=fabric)
+        fr.submit(Job("bc", ["g.bin", "1", "1"], files={"g.bin": g}))
+        fr.submit(Job("hello"))
+        rep = fr.run()
+        reports.append((rep.makespan_ticks, rep.total_bytes,
+                        [(r.job.job_id, r.device_id, r.report.ticks)
+                         for r in rep.jobs]))
+    assert reports[0] == reports[1]
+
+
+# ---------------------------------------------------------------------------
+# gang scheduling: end-to-end, determinism, fabric dependence, migration
+# ---------------------------------------------------------------------------
+def test_gang_runs_bc_end_to_end_over_the_fabric():
+    fleet, rg = _gang_fleet(2)
+    rep = fleet.run_gang(rg)
+    assert rep.n_members == 2 and rep.device_ids == [0, 1]
+    assert all(r.exit_code == 0 for r in rep.reports)
+    assert rep.supersteps >= 2 and rep.exchanges >= 2
+    assert rep.makespan_ticks == max(r.ticks for r in rep.reports)
+    # the halo traffic rode the switch: both ports carried frames, and
+    # every exchange cost fabric wait the members absorbed as stalls
+    ports = rep.fabric["ports"]
+    assert all(p["frames_tx"] > 0 and p["frames_rx"] > 0 for p in ports)
+    assert rep.fabric["total_bytes"] > 0 and rep.wait_ticks > 0
+
+
+def test_gang_deterministic_across_runs():
+    fa, ra = _gang_fleet(2)
+    fb, rb = _gang_fleet(2)
+    a, b = fa.run_gang(ra), fb.run_gang(rb)
+    assert a.makespan_ticks == b.makespan_ticks
+    assert a.exchanges == b.exchanges
+    assert [r.ticks for r in a.reports] == [r.ticks for r in b.reports]
+    assert a.fabric["total_bytes"] == b.fabric["total_bytes"]
+
+
+def test_gang_makespan_tracks_fabric_not_host_link():
+    """End-to-end gang ticks move with switch knobs: slower ports or a
+    longer crossbar push the makespan up, monotonically."""
+    g = graphgen.rmat(4, 4, seed=42, weights=False)
+    def mk(gbits, lat):
+        cfg = {**FASE_FLEET_NET, "net_gbits_per_s": gbits,
+               "net_latency_ticks": lat}
+        fleet, rg = _gang_fleet(2, graph=g,
+                                fabric=Switch(**net_kwargs(cfg)))
+        return fleet.run_gang(rg).makespan_ticks
+    assert mk(1, 500) > mk(16, 500)      # bandwidth helps
+    assert mk(16, 4000) > mk(16, 500)    # latency hurts
+
+
+def test_migrate_gang_moves_whole_gang_to_disjoint_window():
+    g = graphgen.rmat(4, 4, seed=42, weights=False)
+    base_fleet, base_rg = _gang_fleet(2, graph=g)
+    base = base_fleet.run_gang(base_rg)       # unmigrated twin
+    fleet = _fleet(4, fabric=Switch(**net_kwargs()))
+    parts = graphgen.partition(g, 2)
+    rg = fleet.start_gang(GangJob(
+        [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
+         for p in parts], superstep_ticks=40_000, halo_pages=4))
+    assert [h.device.id for h in rg.handles] == [0, 1]
+    migs = fleet.migrate_gang(rg, 2)
+    assert [m.src for m in migs] == [0, 1]
+    assert [m.dst for m in migs] == [2, 3]
+    assert [h.device.id for h in rg.handles] == [2, 3]
+    rep = fleet.run_gang(rg)
+    assert all(r.exit_code == 0 for r in rep.reports)
+    assert rep.device_ids == [2, 3]
+    # migration cost is modelled time: dearer than the unmigrated twin
+    assert rep.makespan_ticks > base.makespan_ticks
+
+
+def test_migrate_gang_rejects_overlapping_window():
+    fleet = _fleet(3, fabric=Switch(**net_kwargs()))
+    parts = graphgen.partition(graphgen.rmat(4, 4, weights=False), 2)
+    rg = fleet.start_gang(GangJob(
+        [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
+         for p in parts]))
+    with pytest.raises(AssertionError, match="overlaps"):
+        migrate_gang(fleet, rg, 1)
+
+
+# ---------------------------------------------------------------------------
+# satellites: partitioner, telemetry integration
+# ---------------------------------------------------------------------------
+def test_graph_partition_is_valid_and_deterministic():
+    import numpy as np
+    g = graphgen.rmat(5, 8, seed=7, weights=True)
+    hdr = np.frombuffer(g[:24], dtype=np.uint64)
+    n, m = int(hdr[0]), int(hdr[1])
+    parts = graphgen.partition(g, 4)
+    assert parts == graphgen.partition(g, 4)
+    tot_n = tot_m = 0
+    for p in parts:
+        ph = np.frombuffer(p[:24], dtype=np.uint64)
+        nn, mm, has_w = int(ph[0]), int(ph[1]), int(ph[2])
+        assert has_w == 1
+        rp = np.frombuffer(p[24:24 + 8 * (nn + 1)], dtype=np.uint64)
+        ci = np.frombuffer(p[24 + 8 * (nn + 1):
+                             24 + 8 * (nn + 1 + mm)], dtype=np.uint64)
+        assert rp[0] == 0 and rp[-1] == mm
+        assert len(ci) == mm and (ci < nn).all()   # reindexed local ids
+        tot_n += nn
+        tot_m += mm
+    assert tot_n == n
+    assert 0 < tot_m <= m                  # cut edges dropped, rest kept
+
+
+def test_counter_bridge_samples_carry_nic_port_counters():
+    fleet = _fleet(2, fabric=Switch(**net_kwargs()),
+                   runtime_kwargs={"telemetry":
+                                   dict(interval_ticks=50_000)})
+    parts = graphgen.partition(graphgen.rmat(4, 4, weights=False), 2)
+    rg = fleet.start_gang(GangJob(
+        [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
+         for p in parts], superstep_ticks=40_000, halo_pages=4))
+    rep = fleet.run_gang(rg)
+    for member in rep.reports:
+        samples = member.telemetry["counters"]["samples"]
+        assert samples and all("nic" in s for s in samples)
+        last = samples[-1]["nic"]
+        assert last["tx_flits"] > 0 and last["credit_stalls"] >= 0
+        assert 0 <= last["link_util"] <= 1

@@ -14,7 +14,12 @@ host<->device links.  Three panels:
     the credit return does too);
   * ``boards``    — 2- vs 4-board gangs of the same graph at the
     registry fabric config, with per-port counters (link_util,
-    credit_stalls) from ``Switch.report``.
+    credit_stalls) from ``Switch.report``;
+  * ``pacing``    — adaptive superstep pacing
+    (``superstep_ticks="auto"``, driven by the per-round halo-wait
+    fraction) against the fixed 200k-tick default quantum: the
+    counter-driven controller must spend fewer ticks parked at gang
+    barriers than the fixed baseline on the same graph.
 
 Artifact: ``results/net_scale.json``.
 """
@@ -40,14 +45,16 @@ SUPERSTEP_TICKS = 40_000
 HALO_PAGES = 4
 
 
-def _gang(boards: int, graph: bytes, cfg: dict):
+def _gang(boards: int, graph: bytes, cfg: dict,
+          superstep_ticks=SUPERSTEP_TICKS, iters: int = 1):
     parts = graphgen.partition(graph, boards)
     fleet = FleetRuntime(n_devices=boards,
                          make_target=lambda: PySim(N_CORES, MEM),
                          link="pcie", fabric=Switch(**net_kwargs(cfg)))
-    gang = GangJob([Job("bc", ["part.bin", "1", "1"],
+    gang = GangJob([Job("bc", ["part.bin", "1", str(iters)],
                         files={"part.bin": p}) for p in parts],
-                   superstep_ticks=SUPERSTEP_TICKS, halo_pages=HALO_PAGES)
+                   superstep_ticks=superstep_ticks,
+                   halo_pages=HALO_PAGES)
     return fleet, fleet.start_gang(gang)
 
 
@@ -114,16 +121,44 @@ def boards_panel(graph: bytes, quick: bool) -> list:
     return rows
 
 
+def pacing_panel(graph: bytes, quick: bool) -> tuple[dict, bool]:
+    """Counter-driven superstep pacing vs the fixed 200k default: same
+    gang, same fabric — the ``"auto"`` controller (EWMA of the halo
+    wait fraction doubling/halving the quantum) must cut barrier wait
+    ticks against the historical fixed quantum."""
+    iters = 8 if quick else 16     # long enough that barrier count
+    rows = {}                      # dominates — pacing has room to act
+    for mode in ("fixed", "auto"):
+        fleet, rg = _gang(2, graph, FASE_FLEET_NET,
+                          superstep_ticks=200_000 if mode == "fixed"
+                          else "auto", iters=iters)
+        rep = fleet.run_gang(rg)
+        rows[mode] = dict(
+            makespan_ticks=rep.makespan_ticks,
+            supersteps=rep.supersteps, exchanges=rep.exchanges,
+            wait_ticks=rep.wait_ticks,
+            quanta=[r["quantum"] for r in rep.rounds],
+            round_waits=[r["wait_ticks"] for r in rep.rounds])
+        print(f"net_scale,bc-gang2@pacing-{mode},{rep.makespan_ticks},"
+              f"wait={rep.wait_ticks} supersteps={rep.supersteps}",
+              flush=True)
+    improves = rows["auto"]["wait_ticks"] < rows["fixed"]["wait_ticks"]
+    rows["pacing_improves"] = improves
+    return rows, improves
+
+
 def run(quick: bool = False):
     graph = graphgen.rmat(4 if quick else 5, 4, seed=42, weights=False)
     bw_rows, bw_mono = bandwidth_panel(graph, quick)
     lat_rows, lat_mono = latency_panel(graph, quick)
     boards = boards_panel(graph, quick)
+    pacing, pacing_improves = pacing_panel(graph, quick)
     out = dict(quick=quick, clock_hz=CLOCK_HZ,
                superstep_ticks=SUPERSTEP_TICKS, halo_pages=HALO_PAGES,
                bandwidth=bw_rows, bandwidth_monotone=bw_mono,
                latency=lat_rows, latency_monotone=lat_mono,
-               boards=boards)
+               boards=boards, pacing=pacing,
+               pacing_improves=pacing_improves)
     save_json("net_scale.json", out)
     print(f"net_scale,summary,{int(bw_mono and lat_mono)},"
           f"makespan monotone in bandwidth({bw_mono}) and "

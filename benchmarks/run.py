@@ -5,8 +5,25 @@ Each module reproduces one paper table/figure (see DESIGN.md §7 index).
 """
 from __future__ import annotations
 
+import pkgutil
 import sys
 import time
+
+#: benchmark-package modules that are not runnable panels
+EXCLUDED = {"common", "run"}
+
+
+def _audit(modules) -> None:
+    """Every module in the package is either registered below or
+    explicitly excluded — a new benchmark that forgets to register
+    fails the driver instead of silently never running."""
+    import benchmarks
+    on_disk = {m.name for m in pkgutil.iter_modules(benchmarks.__path__)}
+    registered = {mod.__name__.rsplit(".", 1)[-1] for _, mod in modules}
+    missing = on_disk - registered - EXCLUDED
+    assert not missing, (
+        f"benchmark module(s) {sorted(missing)} exist on disk but are "
+        f"not registered in benchmarks/run.py (or EXCLUDED)")
 
 
 def main() -> None:
@@ -35,6 +52,7 @@ def main() -> None:
         ("stall_attribution", stall_attribution),
         ("hillclimb", hillclimb),
     ]
+    _audit(modules)
     print("name,us_per_call,derived")
     for name, mod in modules:
         t0 = time.time()

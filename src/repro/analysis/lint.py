@@ -72,6 +72,9 @@ DEFAULT_SCAN = (
     "src/repro/telemetry/stream.py",
     "src/repro/telemetry/bridges.py",
     "src/repro/telemetry/replay.py",
+    "src/repro/telemetry/triggers.py",
+    "src/repro/telemetry/timeline.py",
+    "src/repro/telemetry/load.py",
     "src/repro/serving/htp.py",
     "src/repro/serving/engine.py",
     "src/repro/serving/pages.py",

@@ -53,6 +53,7 @@ fabric instead of the host router (``benchmarks/net_scale.py``).
 """
 from .device import Device, DeviceStats                     # noqa: F401
 from .placement import (POLICIES, AffinityPolicy,           # noqa: F401
+                        LeastLoadedAdaptivePolicy,
                         LeastLoadedBlindPolicy, LeastLoadedPolicy,
                         PlacementPolicy, RoundRobinPolicy, image_key_of,
                         make_policy)

@@ -19,6 +19,7 @@ from ..cq import AsyncHtpSession
 from ..hfutex import HFutexCache
 from ..session import HtpSession
 from ..target.cpu import CLOCK_HZ
+from ...telemetry.load import LoadEstimator
 
 #: image identity of a device provisioned without an explicit image key
 #: (lazy ``.session`` access); distinct from every job image, so the
@@ -37,6 +38,9 @@ class DeviceStats:
     exceptions: int = 0
     provisions: int = 0          # billed re-imagings (bitstream + ELF)
     provision_ticks: int = 0     # total ticks spent re-imaging
+    load_stall_frac: float = 0.0  # EWMA stall fraction (LoadEstimator,
+    #                               fed by the telemetry counter bridge)
+    load_samples: int = 0        # counter samples behind the estimate
     bytes_by_cat: dict = field(default_factory=dict)
 
     def absorb_session(self, session) -> None:
@@ -89,6 +93,9 @@ class Device:
         # by attach_trace; every queue pair this device provisions feeds
         # it under a (device_id, stream)-prefixed ordering domain
         self.trace = None
+        # online load signal (repro.telemetry.load): fed by the counter
+        # bridge of each job's telemetry hub via the session backref
+        self.load = LoadEstimator()
 
     # -- queue pair -----------------------------------------------------
     def provision_ticks_for(self, image_key=None) -> int:
@@ -141,6 +148,9 @@ class Device:
                 self.trace, session_is_serial(self._session),
                 device=self.id)
         self._session.nic = self.nic
+        # backref for the telemetry counter bridge: samples taken on
+        # this queue pair feed the owning device's load estimator
+        self._session.device = self
         return self._session
 
     @property
@@ -189,6 +199,9 @@ class Device:
         self.stats.jobs += 1
         self.stats.busy_ticks += report.ticks if span is None else span
         self.stats.exceptions += report.sched.get("exceptions", 0)
+        self.load.note_job(report.ticks if span is None else span)
+        self.stats.load_stall_frac = self.load.stall_frac
+        self.stats.load_samples = self.load.samples
         if self._session is not None:
             self.stats.absorb_session(self._session)
             self._session = None

@@ -17,6 +17,10 @@ form (never Python's salted ``hash``).
   * ``least_loaded_blind`` — the same greedy without the provisioning
     term (the historical behaviour; the baseline ``benchmarks/
     migration.py`` measures the provision-aware policy against).
+  * ``least_loaded_adaptive`` — ``least_loaded`` plus the telemetry
+    load signal: each device's counter-bridge-fed
+    :class:`~repro.telemetry.load.LoadEstimator` penalty joins the
+    clock comparison (optional — the default policy is unchanged).
   * ``affinity``     — sticky: the same ``affinity_key`` always lands on
     the same device (page-cache / re-image locality across a fleet);
     keyless jobs fall back to round-robin.
@@ -81,8 +85,10 @@ class RoundRobinPolicy(PlacementPolicy):
 class LeastLoadedPolicy(PlacementPolicy):
     name = "least_loaded"
 
-    def __init__(self, provision_aware: bool = True):
+    def __init__(self, provision_aware: bool = True,
+                 load_aware: bool = False):
         self.provision_aware = provision_aware
+        self.load_aware = load_aware
 
     def place(self, job, devices):
         key = image_key_of(job) if self.provision_aware else None
@@ -96,8 +102,29 @@ class LeastLoadedPolicy(PlacementPolicy):
                 fn = getattr(d, "provision_ticks_for", None)
                 if fn is not None:
                     c += fn(key)
+            if self.load_aware:
+                # telemetry-driven signal: the expected stall-bound
+                # queueing penalty from the device's LoadEstimator
+                # (0 on devices without one / without samples yet)
+                load = getattr(d, "load", None)
+                if load is not None:
+                    c += load.penalty_ticks()
             return (c, i)
         return min(enumerate(devices), key=cost)[1]
+
+
+class LeastLoadedAdaptivePolicy(LeastLoadedPolicy):
+    """``least_loaded`` plus the counter-bridge load signal: a device
+    whose recent jobs were stall-bound (high EWMA ``stall_frac`` from
+    its :class:`~repro.telemetry.load.LoadEstimator`) is charged its
+    expected stall penalty on top of the clock — the first consumer of
+    the observability→control loop.  Degrades to plain
+    ``least_loaded`` while no samples exist."""
+
+    name = "least_loaded_adaptive"
+
+    def __init__(self):
+        super().__init__(provision_aware=True, load_aware=True)
 
 
 class LeastLoadedBlindPolicy(LeastLoadedPolicy):
@@ -128,7 +155,7 @@ class AffinityPolicy(PlacementPolicy):
 
 POLICIES = {p.name: p for p in
             (RoundRobinPolicy, LeastLoadedPolicy, LeastLoadedBlindPolicy,
-             AffinityPolicy)}
+             LeastLoadedAdaptivePolicy, AffinityPolicy)}
 
 
 def make_policy(name) -> PlacementPolicy:

@@ -66,7 +66,9 @@ class Target(Protocol):
     def get_instret(self, c: int) -> int: ...
     # Telemetry: commit-trace ring (repro.telemetry) -----------------------
     def trace_arm(self, slots: int) -> None: ...
-    def trace_drain(self, c: int | None = None): ...
+    def trace_trigger(self, spec: tuple | None) -> None: ...
+    def trace_drain(self, c: int | None = None,
+                    limit: int | None = None): ...
 
 
 class JaxTarget:
@@ -106,6 +108,7 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         self.fetch_kernel = fetch_kernel
         self.trace_slots = 0          # commit-trace ring, off by default
         self._trace_base: list = []
+        self._trigger: tuple | None = None   # capture-window predicate
         self.st = _cpu.make_state(n_cores, mem_bytes)
 
     # -- inst stream ------------------------------------------------------
@@ -119,7 +122,8 @@ PySim` — the knobs trade compile time and host speed, never semantics:
             self.st = _cpu.run_chunk_fast(
                 self.st, self.nc, self.mem_bytes, budget,
                 self.issue_width, self.block_words, self.block_cache,
-                self.fetch_kernel, self.trace_slots > 0)
+                self.fetch_kernel, self.trace_slots > 0,
+                self._trigger if self.trace_slots > 0 else None)
         else:
             self.st = _cpu.run_chunk(self.st, self.nc, self.mem_bytes,
                                      budget)
@@ -262,33 +266,52 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         self.trace_slots = slots
         self.st = self.st._replace(
             tracebuf=jnp.zeros((self.nc, slots, 4), jnp.uint64),
-            trace_n=jnp.zeros((self.nc,), jnp.uint64))
+            trace_n=jnp.zeros((self.nc,), jnp.uint64),
+            trace_armed=jnp.zeros((self.nc,), jnp.bool_))
+
         self._trace_base = [0] * self.nc
 
-    def trace_drain(self, c=None):
+    def trace_trigger(self, spec):
+        """Install (or clear) the capture-window predicate — a hashable
+        trigger spec tuple (see :mod:`repro.telemetry.triggers`) that
+        becomes a *static* argument of ``run_chunk_fast``, so the gate
+        compiles into the trace path and ``None`` compiles it out
+        entirely.  Arm/disarm state rewinds to disarmed."""
+        self._trigger = spec
+        self.st = self.st._replace(
+            trace_armed=jnp.zeros((self.nc,), jnp.bool_))
+
+    def trace_drain(self, c=None, limit=None):
         """Drain commit-trace rings, mirroring
         :meth:`repro.core.target.pysim.PySim.trace_drain` bit-for-bit:
         ``(records, ring_dropped)`` per hart.  ``c=None`` bundles every
         hart's ring + produced-counts into ONE ``jax.device_get`` (the
         ``fetch_batch`` discipline — a drain is a chunk-boundary bulk
-        read, not per-record round trips)."""
+        read, not per-record round trips).  ``limit`` caps the records
+        taken per hart: the rest stay *in the ring* (streamed-transport
+        FIFO stall — a stalled bridge leaves records behind, and later
+        overwrites surface as ``ring_dropped`` on a future drain)."""
         if self.trace_slots == 0:     # unarmed: nothing to drain
             return ([], 0) if c is not None else [([], 0)] * self.nc
         if c is None:
             buf, totals = jax.device_get((self.st.tracebuf,
                                           self.st.trace_n))
-            return [self._drain_host(buf[i], int(totals[i]), i)
+            return [self._drain_host(buf[i], int(totals[i]), i, limit)
                     for i in range(self.nc)]
         buf, total = jax.device_get((self.st.tracebuf[c],
                                      self.st.trace_n[c]))
-        return self._drain_host(buf, int(total), c)
+        return self._drain_host(buf, int(total), c, limit)
 
-    def _drain_host(self, buf, total, c):
+    def _drain_host(self, buf, total, c, limit=None):
         slots = self.trace_slots
         base = self._trace_base[c]
         n_new = total - base
         dropped = max(0, n_new - slots)
+        avail_start = base + dropped      # oldest record still in the ring
+        take = total - avail_start
+        if limit is not None:
+            take = min(take, limit)
         recs = [tuple(int(v) for v in buf[i % slots])
-                for i in range(total - (n_new - dropped), total)]
-        self._trace_base[c] = total
+                for i in range(avail_start, avail_start + take)]
+        self._trace_base[c] = avail_start + take
         return recs, dropped

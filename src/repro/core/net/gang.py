@@ -28,6 +28,19 @@ from dataclasses import dataclass, field
 
 from ..target.cpu import CLOCK_HZ
 
+#: adaptive superstep pacing (``superstep_ticks="auto"``): the quantum
+#: starts at the historical default and doubles / halves on the EWMA of
+#: the per-round halo wait fraction (wait_ticks / quantum).  A round
+#: whose barrier cost more than AUTO_HI of the quantum means barriers
+#: are too frequent — grow; below AUTO_LO they are nearly free — shrink
+#: toward fresher halos.  The EWMA blend matches the telemetry
+#: LoadEstimator's (repro.telemetry.load.ALPHA).
+AUTO_START = 200_000
+AUTO_MIN = 25_000
+AUTO_MAX = 1_600_000
+AUTO_HI = 0.01
+AUTO_LO = 0.002
+
 
 @dataclass
 class GangJob:
@@ -35,7 +48,10 @@ class GangJob:
     goes to member (i+1) % N each superstep)."""
 
     jobs: list                     # fleet.Job, one per member/board
-    superstep_ticks: int = 200_000  # compute quantum between barriers
+    #: compute quantum between barriers, or ``"auto"`` — counter-driven
+    #: pacing that grows/shrinks the quantum from the observed halo
+    #: wait fraction (see AUTO_* above)
+    superstep_ticks: int | str = 200_000
     halo_pages: int = 2            # boundary pages shipped per neighbour
     max_supersteps: int = 256
     gang_id: int = -1
@@ -66,6 +82,9 @@ class GangReport:
     makespan_ticks: int = 0        # max member completion tick
     wait_ticks: int = 0            # summed resume-floor stalls (fabric)
     fabric: dict = field(default_factory=dict)   # Switch.report()
+    #: per-round bookkeeping (superstep, quantum, t0, t1, wait_ticks) —
+    #: feeds the unified timeline's superstep track and the pacing panel
+    rounds: list = field(default_factory=list)
 
     @property
     def makespan_seconds(self) -> float:
@@ -129,15 +148,23 @@ def run_gang(fleet, rg: RunningGang) -> GangReport:
     live = [i for i in range(n)]
     supersteps = exchanges = wait_ticks = 0
     horizon = 0
+    auto = gang.superstep_ticks == "auto"
+    quantum = AUTO_START if auto else gang.superstep_ticks
+    wait_ema = 0.0
+    rounds: list = []
     while live and supersteps < gang.max_supersteps:
         supersteps += 1
-        horizon += gang.superstep_ticks
+        t0 = horizon
+        horizon += quantum
+        round_wait = 0
         for i in list(live):
             rep = fleet.step_job(handles[i], pause_ticks=horizon)
             if rep is not None:
                 reports[i] = rep
                 live.remove(i)
         if len(live) < 2:
+            rounds.append(dict(superstep=supersteps, quantum=quantum,
+                               t0=t0, t1=horizon, wait_ticks=0))
             continue              # no neighbour left to exchange with
         # ---- gang barrier: all live members quiesce, then exchange ----
         start = max(_quiesce(handles[i]) for i in live)
@@ -176,7 +203,20 @@ def run_gang(fleet, rg: RunningGang) -> GangReport:
                 # becomes modelled stall time without wire traffic
                 h.runtime.session.t.csr_write(0, "ticks", floor)
                 wait_ticks += floor - now
+                round_wait += floor - now
         horizon = max(horizon, max(arrival.values(), default=horizon))
+        rounds.append(dict(superstep=supersteps, quantum=quantum,
+                           t0=t0, t1=horizon, wait_ticks=round_wait))
+        if auto:
+            # counter-driven pacing: EWMA of this round's halo wait
+            # fraction steers the next quantum (grow = fewer barriers,
+            # shrink = fresher halos); the fixed path never enters here
+            frac = round_wait / max(quantum, 1)
+            wait_ema += 0.5 * (frac - wait_ema)
+            if wait_ema > AUTO_HI:
+                quantum = min(quantum * 2, AUTO_MAX)
+            elif wait_ema < AUTO_LO:
+                quantum = max(quantum // 2, AUTO_MIN)
     assert not live, "gang exceeded max_supersteps"
     makespan = max(r.ticks for r in reports)
     return GangReport(
@@ -184,7 +224,7 @@ def run_gang(fleet, rg: RunningGang) -> GangReport:
         device_ids=[h.device.id for h in handles],
         reports=reports, supersteps=supersteps, exchanges=exchanges,
         makespan_ticks=makespan, wait_ticks=wait_ticks,
-        fabric=fleet.fabric.report(horizon=makespan))
+        fabric=fleet.fabric.report(horizon=makespan), rounds=rounds)
 
 
 def migrate_gang(fleet, rg: RunningGang, dst_start: int) -> list:

@@ -103,6 +103,9 @@ class CpuState(NamedTuple):
     #                          (tick, pc, inst, priv) per retirement
     trace_n: jax.Array       # (nc,) u64 — records ever produced (the
     #                          host derives ring drops from this)
+    trace_armed: jax.Array   # (nc,) bool — sticky capture-window arm
+    #                          state for pc/inst triggers (trace_trigger;
+    #                          NOT snapshot state)
 
 
 def make_state(n_cores: int, mem_bytes: int,
@@ -119,6 +122,7 @@ def make_state(n_cores: int, mem_bytes: int,
         ticks=_u(0), uticks=z(), instret=z(),
         stall_ticks=z(), fetch_hits=z(), fetch_walks=z(), tlb_walks=z(),
         tracebuf=jnp.zeros((nc, trace_slots, 4), U64), trace_n=z(),
+        trace_armed=jnp.zeros((nc,), bool),
     )
 
 
@@ -516,7 +520,8 @@ def _empty_blocks(nc: int, block_words: int) -> FetchBlocks:
 
 def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
                   budget_left, nc: int, mask, block_words: int,
-                  block_cache: bool, walk_fetch, trace_on: bool = False):
+                  block_cache: bool, walk_fetch, trace_on: bool = False,
+                  trigger: tuple | None = None):
     """One fast-path substep: a whole global tick in the common case.
 
     Mirrors :func:`_exec_one` lane-wise from the pre-substep state, then
@@ -849,17 +854,39 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         # retirement at trace_n % slots; non-retiring lanes scatter to
         # an out-of-range row and drop.  The host derives overflow drops
         # from the monotone trace_n, so ring wrap is loss-*counting*,
-        # never loss-hiding.
+        # never loss-hiding.  `trigger` is a STATIC capture-window spec
+        # (repro.telemetry.triggers): the gate below compiles into the
+        # trace path, and trigger=None compiles to the plain ungated
+        # ring — the predicate is free when unused.
         slots = st.tracebuf.shape[1]
         ret_nc = cut(ret)
-        rows = jnp.where(ret_nc, jnp.arange(nc, dtype=jnp.int32),
+        new_trace_armed = st.trace_armed
+        if trigger is None:
+            cap = ret_nc
+        elif trigger[0] == "tick":
+            cap = ret_nc & (st.ticks >= _u(trigger[1])) & \
+                (st.ticks < _u(trigger[2]))
+        elif trigger[0] == "instret":
+            # pre-retirement count (st.instret increments below)
+            cap = ret_nc & (st.instret >= _u(trigger[1]))
+        else:                       # "pc" / "inst": sticky arm/disarm
+            val = cut(pc) if trigger[0] == "pc" else cut(inst)
+            armed_now = st.trace_armed | (ret_nc & (val == _u(trigger[1])))
+            cap = ret_nc & armed_now
+            if trigger[2] is None:
+                new_trace_armed = armed_now
+            else:
+                new_trace_armed = armed_now & \
+                    ~(ret_nc & (val == _u(trigger[2])))
+        rows = jnp.where(cap, jnp.arange(nc, dtype=jnp.int32),
                          jnp.int32(nc))
         ring = (st.trace_n % _u(slots)).astype(jnp.int32)
         rec = jnp.stack([jnp.broadcast_to(st.ticks, (nc,)), cut(pc),
                          cut(inst), cut(priv).astype(U64)], axis=1)
         new_tracebuf = st.tracebuf.at[rows, ring].set(rec, mode="drop")
-        new_trace_n = st.trace_n + ret_nc.astype(U64)
+        new_trace_n = st.trace_n + cap.astype(U64)
     else:
+        new_trace_armed = st.trace_armed
         new_tracebuf, new_trace_n = st.tracebuf, st.trace_n
 
     st = st._replace(
@@ -879,6 +906,7 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         fetch_walks=st.fetch_walks + cut((miss & safe).astype(U64)),
         tracebuf=new_tracebuf,
         trace_n=new_trace_n,
+        trace_armed=new_trace_armed,
     )
     if L != nc:
         fb = FetchBlocks(fb.vbase[:nc], fb.pbase[:nc], fb.nbytes[:nc],
@@ -886,12 +914,13 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     return st, fb, new_from, dticks
 
 
-@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7, 8),
+@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7, 8, 9),
          donate_argnums=(0,))
 def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
                    issue_width: int = 8, block_words: int = 16,
                    block_cache: bool = True, fetch_kernel: str = "ref",
-                   trace_on: bool = False) -> CpuState:
+                   trace_on: bool = False,
+                   trigger: tuple | None = None) -> CpuState:
     """Fast-path twin of :func:`run_chunk`: identical architectural
     semantics, up to ``issue_width`` vectorized ticks per loop iteration.
 
@@ -900,7 +929,10 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
     fetch for every instruction.  ``fetch_kernel`` picks the translate/
     fetch-gather backend for block fills: ``"ref"`` (pure-jnp oracle,
     the CPU default) or ``"pallas"`` (the interpret-capable Pallas
-    kernel, native on TPU).
+    kernel, native on TPU).  ``trigger`` (static, a hashable trigger
+    spec from :mod:`repro.telemetry.triggers`) windows commit-trace
+    capture; it only affects which records enter the ring — never the
+    architectural step — and ``None`` compiles the gate out.
     """
     assert block_words & (block_words - 1) == 0, "block_words must be pow2"
     assert not trace_on or st.tracebuf.shape[1] > 0, \
@@ -942,7 +974,7 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
             gate = ~jnp.any(st.pending) & (cycles < limit)
             st, fb, exec_from, d = _exec_substep(
                 st, fb, exec_from, gate, limit - cycles, nc, mask,
-                block_words, block_cache, walk_fetch, trace_on)
+                block_words, block_cache, walk_fetch, trace_on, trigger)
             return st, cycles + d, exec_from, fb
 
         # fori_loop: the substep traces once, runs issue_width times — a

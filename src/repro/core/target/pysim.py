@@ -113,6 +113,10 @@ class PySim:
         self.tracebuf = [[] for _ in range(n)]
         self.trace_n = [0] * n
         self._trace_base = [0] * n
+        # Capture-window trigger (trace_trigger): spec tuple + per-core
+        # sticky arm state, mirroring the jitted trace path bit-for-bit.
+        self._trigger = None
+        self.trace_armed = [False] * n
         # Two-level host-side translation cache (pure speed, no modelled
         # cost; the jitted target walks every access so nothing to
         # mirror).  L1 is per-core and dropped on set_satp — i.e. every
@@ -279,22 +283,38 @@ class PySim:
         self.tracebuf = [[None] * slots for _ in range(self.nc)]
         self.trace_n = [0] * self.nc
         self._trace_base = [0] * self.nc
+        self.trace_armed = [False] * self.nc
 
-    def trace_drain(self, c=None):
+    def trace_trigger(self, spec):
+        """Install (or clear) the capture-window predicate — a trigger
+        spec tuple (see :mod:`repro.telemetry.triggers`) evaluated at
+        the retire point, the semantic twin of the jitted trace path's
+        static predicate.  Arm/disarm state rewinds to disarmed."""
+        self._trigger = spec
+        self.trace_armed = [False] * self.nc
+
+    def trace_drain(self, c=None, limit=None):
         """Drain one hart's ring (``c=None``: every hart, bundled):
         returns ``(records, ring_dropped)`` — the surviving
         ``(tick, pc, inst, priv)`` records since the previous drain in
-        commit order, and how many older records the ring overwrote."""
+        commit order, and how many older records the ring overwrote.
+        ``limit`` caps the records taken: the rest stay in the ring
+        (a stalled streaming bridge leaves them behind; overwrites show
+        up as ``ring_dropped`` on a later drain)."""
         if c is None:
-            return [self.trace_drain(i) for i in range(self.nc)]
+            return [self.trace_drain(i, limit) for i in range(self.nc)]
         total = self.trace_n[c]
         base = self._trace_base[c]
         n_new = total - base
         dropped = max(0, n_new - self.trace_slots)
+        avail_start = base + dropped    # oldest record still in the ring
+        take = total - avail_start
+        if limit is not None:
+            take = min(take, limit)
         ring = self.tracebuf[c]
         recs = [ring[i % self.trace_slots]
-                for i in range(total - (n_new - dropped), total)]
-        self._trace_base[c] = total
+                for i in range(avail_start, avail_start + take)]
+        self._trace_base[c] = avail_start + take
         return recs, dropped
 
     # ------------------------------------------------------------------
@@ -469,7 +489,7 @@ class PySim:
             self.pc[c] = next_pc
             self.instret[c] += 1
             self.uticks[c] += 1
-            if self.trace_slots:
+            if self.trace_slots and self._trace_capture(c, pc, inst):
                 # commit-trace record: mirrors the jitted ring bit-for-
                 # bit (tick at retirement, pre-exec pc, raw instruction,
                 # privilege)
@@ -478,6 +498,28 @@ class PySim:
                 self.trace_n[c] += 1
         except _Trap as t:
             self._trap(c, t.cause, pc, t.tval)
+
+    def _trace_capture(self, c, pc, inst) -> bool:
+        """Capture-window gate at the retire point — the semantic twin
+        of the jitted trace path's static trigger predicate.  ``pc`` is
+        the pre-exec pc and ``inst`` the raw word of the retirement
+        being considered; sticky arm/disarm state lives in
+        ``trace_armed``."""
+        t = self._trigger
+        if t is None:
+            return True
+        kind = t[0]
+        if kind == "tick":
+            return t[1] <= self.ticks < t[2]
+        if kind == "instret":
+            # instret was incremented above; the gate compares the
+            # pre-retirement count, exactly as the jitted path does
+            return self.instret[c] > t[1]
+        val = pc if kind == "pc" else inst
+        armed = self.trace_armed[c] or val == t[1]
+        self.trace_armed[c] = armed and not (
+            t[2] is not None and val == t[2])
+        return armed
 
     # -- ALU -------------------------------------------------------------
     def _alu(self, f3, f7, a, b, mext, imm=False):

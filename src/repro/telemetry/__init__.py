@@ -26,13 +26,33 @@ behind one ``pump(now)`` surface that :class:`repro.core.runtime.\
 FaseRuntime` drives (``telemetry=`` constructor kwarg); captured commit
 traces feed :mod:`repro.telemetry.replay` — lockstep trace-driven
 conformance against PySim.
+
+Around the bridges:
+
+  * :mod:`~repro.telemetry.triggers` — windowed capture: a
+    :class:`~repro.telemetry.triggers.TriggerSelector` (PC / instruction
+    match with arm/disarm, counter threshold, tick range) gates both
+    bridges and the target-side retire-point capture predicate;
+  * :mod:`~repro.telemetry.timeline` — merge the transaction trace,
+    telemetry samples, fabric counters, gang supersteps and migration
+    spans into one Perfetto-openable Chrome trace-event JSON
+    (``python -m repro.telemetry timeline <workload>``);
+  * :mod:`~repro.telemetry.load` — the observability→control loop: an
+    online per-device :class:`~repro.telemetry.load.LoadEstimator` fed
+    by the counter bridge, consumed by ``least_loaded_adaptive``
+    placement and the gang's ``superstep_ticks="auto"`` pacing.
 """
 from .stream import TELEM_STREAM, TelemStream
 from .bridges import CommitTraceBridge, CounterBridge, TelemetryHub
+from .load import LoadEstimator
 from .replay import TraceDivergence, capture_commit_trace, replay_trace
+from .timeline import build_timeline, save_timeline, validate_timeline
+from .triggers import TriggerSelector, as_spec
 
 __all__ = [
     "TELEM_STREAM", "TelemStream",
     "CounterBridge", "CommitTraceBridge", "TelemetryHub",
     "capture_commit_trace", "replay_trace", "TraceDivergence",
+    "TriggerSelector", "as_spec", "LoadEstimator",
+    "build_timeline", "validate_timeline", "save_timeline",
 ]

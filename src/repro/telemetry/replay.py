@@ -40,7 +40,8 @@ class TraceDivergence:
 
 
 def _run_with_trace(name, argv_tail, *, target, n_cores, mem, files,
-                    link, slots, target_opts=None, max_ticks=1 << 36):
+                    link, slots, target_opts=None, trigger=None,
+                    max_ticks=1 << 36):
     from ..core.runtime import FaseRuntime
     from ..core.target.pysim import PySim
     from ..core.workloads import build
@@ -52,7 +53,7 @@ def _run_with_trace(name, argv_tail, *, target, n_cores, mem, files,
     rt = FaseRuntime(tgt, mode="fase", link=link, session="async",
                      telemetry=dict(counters=False, commit_trace=True,
                                     trace_slots=slots,
-                                    backlog_ticks=None))
+                                    backlog_ticks=None, trigger=trigger))
     rt.load(build(name), [name] + list(argv_tail), files=files or {})
     rep = rt.run(max_ticks=max_ticks)
     return rt.telemetry, rep
@@ -60,15 +61,18 @@ def _run_with_trace(name, argv_tail, *, target, n_cores, mem, files,
 
 def capture_commit_trace(name, argv_tail, *, target="pysim",
                          n_cores=1, mem=1 << 22, files=None, link="pcie",
-                         slots=1 << 15, target_opts=None,
+                         slots=1 << 15, target_opts=None, trigger=None,
                          max_ticks=1 << 36):
     """Run a workload with lossless commit-trace capture; returns
     ``(records, report)`` where ``records[c]`` is hart *c*'s full
-    commit-order record list."""
+    commit-order record list.  ``trigger`` windows the capture (a
+    :class:`~repro.telemetry.triggers.TriggerSelector` or spec tuple);
+    a windowed capture replays against an identically-windowed
+    reference."""
     hub, rep = _run_with_trace(
         name, argv_tail, target=target, n_cores=n_cores, mem=mem,
         files=files, link=link, slots=slots, target_opts=target_opts,
-        max_ticks=max_ticks)
+        trigger=trigger, max_ticks=max_ticks)
     bridge = hub.commit
     if any(bridge.ring_dropped) or any(bridge.frame_dropped):
         raise ValueError(
@@ -79,7 +83,7 @@ def capture_commit_trace(name, argv_tail, *, target="pysim",
 
 
 def replay_trace(records, name, argv_tail, *, n_cores=1, mem=1 << 22,
-                 files=None, link="pcie", slots=1 << 15,
+                 files=None, link="pcie", slots=1 << 15, trigger=None,
                  max_ticks=1 << 36) -> list[TraceDivergence]:
     """Replay a captured commit trace against the PySim reference.
 
@@ -92,7 +96,8 @@ def replay_trace(records, name, argv_tail, *, n_cores=1, mem=1 << 22,
     """
     ref, _ = capture_commit_trace(
         name, argv_tail, target="pysim", n_cores=n_cores, mem=mem,
-        files=files, link=link, slots=slots, max_ticks=max_ticks)
+        files=files, link=link, slots=slots, trigger=trigger,
+        max_ticks=max_ticks)
     divergences = []
     for c, (cap, exp) in enumerate(zip(records, ref)):
         for i in range(max(len(cap), len(exp))):

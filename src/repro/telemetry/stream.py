@@ -12,10 +12,19 @@ occupancy clock and its own byte counters.  It never touches
   * the async engine's doorbell/wire state,
 
 so arming telemetry cannot move a golden tick by construction — the
-stream is *timed but non-perturbing*.  Backpressure is modelled by
-drop-counting: when the lane's backlog at submit time exceeds
-``max_backlog_ticks`` the frame is dropped (the bridge FIFO overflowed)
-and counted, exactly the failure mode a real out-of-band bridge has.
+stream is *timed but non-perturbing*.
+
+Backpressure is modelled FIFO-style, the way a real TracerV bridge
+behaves: a bridge first asks :meth:`TelemStream.accepts` whether the
+lane's backlog is within budget and, when it is not, **stalls** — it
+leaves its records where they are (the target ring, the sampler's
+deferral slot) and retries at the next pump, accruing ``stall_ticks``
+via :meth:`note_stall`.  Loss then happens only where the hardware
+loses data (ring overwrites, accounted per record by the bridge), never
+by silently discarding a whole submitted frame.  The drop path in
+:meth:`submit` remains as a last resort for callers that do not
+pre-check, and every drop is now attributed: ``dropped_bytes`` rides
+next to ``dropped_frames``, globally and per bridge.
 
 Submitted frames are recorded into the session's hazard trace under a
 dedicated always-live ordering domain (``"telem"``, device-prefixed in
@@ -33,6 +42,10 @@ from ..core.session import TransactionResult
 #: ordering-domain / stream key of the telemetry lane
 TELEM_STREAM = "telem"
 
+#: per-bridge accounting template (see ``TelemStream.report()``)
+_BRIDGE_KEYS = ("frames", "bytes", "dropped_frames", "dropped_bytes",
+                "stall_ticks")
+
 
 class TelemStream:
     """Side-band telemetry lane over one session's channel."""
@@ -48,14 +61,24 @@ class TelemStream:
         self.busy_until = 0
         self.frames = 0
         self.dropped_frames = 0
+        self.dropped_bytes = 0
+        self.stall_ticks = 0
         self.bytes_total = 0
         self.bytes_by_op: dict = {}
+        self.per_bridge: dict[str, dict] = {}
 
     def rebind(self, session):
         """Follow the runtime onto a new session (job migration); the
         lane's occupancy clock and counters carry over."""
         assert session.t is not None
         self.session = session
+
+    def _bridge(self, name: str | None) -> dict:
+        key = name or "anon"
+        b = self.per_bridge.get(key)
+        if b is None:
+            b = self.per_bridge[key] = dict.fromkeys(_BRIDGE_KEYS, 0)
+        return b
 
     def ticks_for_bytes(self, nbytes: int) -> int:
         """Wire time of a telemetry payload on this lane: the channel's
@@ -65,7 +88,28 @@ class TelemStream:
             return 0
         return ceil(ch.ticks_for_bytes(nbytes) / self.bandwidth_frac)
 
-    def submit(self, txn, at: int, values: list | None = None):
+    def backlog(self, at: int) -> int:
+        """Ticks of queued lane occupancy ahead of a frame submitted
+        at tick ``at``."""
+        return max(0, self.busy_until - at)
+
+    def accepts(self, at: int) -> bool:
+        """Whether the lane would take a frame at tick ``at`` without
+        tripping the backlog budget — bridges poll this and *stall*
+        (retain records, retry next pump) when it is ``False``."""
+        return self.max_backlog_ticks is None or \
+            self.backlog(at) <= self.max_backlog_ticks
+
+    def note_stall(self, bridge: str, at: int):
+        """Account one bridge FIFO stall at tick ``at``: the bridge had
+        records ready but the lane's backlog exceeded budget, so it
+        held them.  Accrues the current backlog as stall time."""
+        stalled = self.backlog(at)
+        self.stall_ticks += stalled
+        self._bridge(bridge)["stall_ticks"] += stalled
+
+    def submit(self, txn, at: int, values: list | None = None,
+               bridge: str | None = None, force: bool = False):
         """Emit one telemetry frame transaction at tick ``at``.
 
         Returns a :class:`TransactionResult` (completion tick on the
@@ -73,19 +117,27 @@ class TelemStream:
         dropped by backpressure.  ``values`` pre-fills the per-request
         responses (the commit-trace bridge drains host-side and ships
         frames already filled); when omitted each request is applied
-        through the session's normal device half.
+        through the session's normal device half.  ``bridge`` names the
+        submitter for per-bridge accounting; ``force=True`` queues the
+        frame behind any backlog instead of dropping it (final-flush
+        frames wait out the FIFO rather than vanish).
         """
-        start = max(at, self.busy_until)
-        if self.max_backlog_ticks is not None and \
-                start - at > self.max_backlog_ticks:
-            self.dropped_frames += 1
-            return None
         nbytes = txn.wire_bytes()
+        acct = self._bridge(bridge)
+        start = max(at, self.busy_until)
+        if not force and not self.accepts(at):
+            self.dropped_frames += 1
+            self.dropped_bytes += nbytes
+            acct["dropped_frames"] += 1
+            acct["dropped_bytes"] += nbytes
+            return None
         ch = self.session.channel
         done = start + ch.latency_ticks + self.ticks_for_bytes(nbytes)
         self.busy_until = done
         self.frames += 1
         self.bytes_total += nbytes
+        acct["frames"] += 1
+        acct["bytes"] += nbytes
         if values is None:
             values = [self.session._apply(r, done) for r in txn.requests]
         for r in txn.requests:
@@ -107,7 +159,11 @@ class TelemStream:
             "bandwidth_frac": self.bandwidth_frac,
             "frames": self.frames,
             "dropped_frames": self.dropped_frames,
+            "dropped_bytes": self.dropped_bytes,
+            "stall_ticks": self.stall_ticks,
             "bytes": self.bytes_total,
             "bytes_by_op": dict(self.bytes_by_op),
+            "per_bridge": {k: dict(v)
+                           for k, v in sorted(self.per_bridge.items())},
             "busy_until": self.busy_until,
         }

@@ -24,17 +24,30 @@ ARMED = dict(counters=True, commit_trace=True, interval_ticks=50_000,
 
 
 def test_hello_uart_golden_with_bridges_armed():
-    """Both bridges on the starved UART lane: frames drop (the lane is
-    lossy by design) but the run's timing is untouched."""
+    """Both bridges on the starved UART lane: the bridge FIFOs *stall*
+    (samples defer, records wait in the target ring) instead of
+    dropping frames, the stall time is attributed per bridge, and the
+    run's timing is untouched."""
     rt, rep, _ = run_workload("hello", [], mode="fase", n_cores=1,
                               mem=1 << 22, telemetry=dict(ARMED))
     assert rep.ticks == HELLO_UART_TICKS
     assert rep.stdout == b"hello from FASE target\nanswer 42\n"
     tel = rep.telemetry
-    assert tel["stream"]["frames"] > 0
-    # 10% of a 921600-baud UART cannot carry the trace — the drops are
-    # counted, never hidden, and never borrowed from the main lane
-    assert tel["stream"]["dropped_frames"] > 0
+    s = tel["stream"]
+    assert s["frames"] > 0
+    # 10% of a 921600-baud UART cannot keep up — but backpressure is
+    # FIFO-stall, not silent discard: nothing submitted is ever lost
+    assert s["dropped_frames"] == 0
+    assert s["dropped_bytes"] == 0
+    assert s["stall_ticks"] > 0
+    # the stall time is attributed to the bridges that ate it
+    assert set(s["per_bridge"]) == {"counters", "commit_trace"}
+    assert any(b["stall_ticks"] > 0 for b in s["per_bridge"].values())
+    assert tel["counters"]["deferred_samples"] > 0
+    # hello retires fewer instructions than the 256-slot ring holds, so
+    # the stalled bridge drains *every* record by the final flush
+    assert sum(tel["commit_trace"]["records"]) == sum(rep.instret)
+    assert sum(tel["commit_trace"]["ring_dropped"]) == 0
 
 
 def test_bc_pcie_golden_and_traffic_with_bridges_armed():
@@ -134,6 +147,110 @@ def test_trace_replay_conformance_bc():
     assert divergences == []
 
 
+BACKENDS = (("pysim", None), ("jax", JAX_FAST))
+
+
+def _pc_window():
+    """A real arm/disarm PC pair from hello's commit stream (PCs a few
+    records in from either end, so the window is a strict sub-range)."""
+    from repro.telemetry import capture_commit_trace
+    recs, _ = capture_commit_trace("hello", [], n_cores=1)
+    pcs = [r[1] for r in recs[0]]
+    return pcs[5], pcs[-5], len(pcs)
+
+
+def test_pc_window_trigger_identical_across_backends():
+    """A sticky PC arm/disarm window captures the identical record
+    sub-stream on PySim and the jitted fast path — the jax trigger
+    predicate is compiled into the trace path, the PySim mirror sits at
+    the retire point, and they must agree record-for-record."""
+    from repro.telemetry import capture_commit_trace
+
+    arm, disarm, full = _pc_window()
+    got = {}
+    for target, opts in BACKENDS:
+        recs, rep = capture_commit_trace(
+            "hello", [], target=target, target_opts=opts, n_cores=1,
+            trigger=("pc", arm, disarm))
+        got[target] = (recs, rep.ticks)
+    (rp, tp), (rj, tj) = got["pysim"], got["jax"]
+    assert tp == tj
+    assert rp == rj
+    assert 0 < len(rp[0]) < full, "window must be a strict sub-capture"
+
+
+def test_hello_uart_golden_with_pc_window_trigger():
+    """Golden hello@UART with a PC-window trigger armed: the capture
+    window gates what the ring records, never when the target runs."""
+    trig = ("pc", 0x10000, None)      # arm at the entry point, stay on
+    rt, rep, _ = run_workload("hello", [], mode="fase", n_cores=1,
+                              mem=1 << 22,
+                              telemetry=dict(ARMED, trigger=trig))
+    assert rep.ticks == HELLO_UART_TICKS
+    tel = rep.telemetry
+    assert tel["commit_trace"]["trigger"] == list(trig)
+    assert sum(tel["commit_trace"]["records"]) == sum(rep.instret)
+
+
+def test_bc_pcie_golden_with_pc_window_trigger():
+    """Golden bc@PCIe (ticks + traffic pin) with the PC-window trigger
+    active on both bridges — windowed capture is as non-perturbing as
+    unwindowed."""
+    g = graphgen.rmat(4, 4, weights=True)
+    trig = ("pc", 0x10000, None)
+    rt, rep, _ = run_workload("bc", ["g.bin", "2", "1"], mode="fase",
+                              link="pcie", n_cores=2, mem=1 << 22,
+                              files={"g.bin": g},
+                              telemetry=dict(ARMED, trigger=trig))
+    assert rep.ticks == BC_PCIE_TICKS
+    assert sum(rep.instret) == BC_PCIE_INSTRET
+    assert rep.traffic_total == BC_PCIE_TRAFFIC
+    assert sum(rep.telemetry["commit_trace"]["records"]) > 0
+
+
+def test_starved_lane_fifo_stall_all_backends():
+    """A nearly-zero backlog budget starves the lane on every backend:
+    the bridges stall and defer, yet nothing is dropped and (where the
+    ring is armed) every record still lands by the final flush."""
+    for target, opts, commit in (("pysim", None, True),
+                                 ("jax", JAX_FAST, True),
+                                 ("jax", dict(fast_path=False), False)):
+        cfg = dict(counters=True, commit_trace=commit,
+                   interval_ticks=2_000, trace_slots=256,
+                   bandwidth_frac=0.00005, backlog_ticks=1_000)
+        rt, rep, _ = run_workload("hello", [], mode="fase", n_cores=1,
+                                  mem=1 << 22, link="pcie",
+                                  target=target, target_opts=opts,
+                                  telemetry=cfg)
+        label = f"{target}:{'fast' if commit else 'slow'}"
+        s = rep.telemetry["stream"]
+        assert s["stall_ticks"] > 0, label
+        assert s["dropped_frames"] == 0, label
+        assert s["dropped_bytes"] == 0, label
+        if commit:
+            ct = rep.telemetry["commit_trace"]
+            assert sum(ct["records"]) == sum(rep.instret), label
+            assert sum(ct["ring_dropped"]) == 0, label
+        else:
+            assert rep.telemetry["counters"]["deferred_samples"] > 0, \
+                label
+
+
+def test_trace_replay_conformance_over_trigger_window():
+    """Lockstep replay stays green over a *windowed* capture: a trace
+    captured on the fast path under an instret-threshold trigger
+    replays divergence-free against an identically-windowed PySim
+    reference."""
+    from repro.telemetry import capture_commit_trace, replay_trace
+
+    trig = ("instret", 100)
+    recs, rep = capture_commit_trace("hello", [], target="jax",
+                                     target_opts=JAX_FAST, n_cores=1,
+                                     trigger=trig)
+    assert 0 < sum(len(r) for r in recs) < sum(rep.instret)
+    assert replay_trace(recs, "hello", [], n_cores=1, trigger=trig) == []
+
+
 def test_replay_flags_a_tampered_trace():
     """The replay check has teeth: corrupt one record and it reports
     exactly that divergence."""
@@ -147,3 +264,63 @@ def test_replay_flags_a_tampered_trace():
     div = replay_trace(recs, "hello", [], n_cores=1)
     assert len(div) == 1
     assert (div[0].core, div[0].index) == (0, idx)
+
+
+# -- unified timeline ---------------------------------------------------
+# pinned independently of tests/test_golden_ticks.py (same policy as the
+# tick constants above): the timeline run arms both bridges, and the
+# gang makespan must not move a tick for it
+GANG_BC_MAKESPAN = 526_792
+
+
+def test_timeline_gang_tracks_and_golden_makespan():
+    """The 2-board gang timeline validates against the schema check and
+    carries every promised track family: per-device session
+    transactions, the telem lane, the fabric (nic) domain and the gang
+    superstep track — with the golden makespan untouched by the armed
+    bridges and the trace hook."""
+    from repro.telemetry.__main__ import _timeline_gang
+    from repro.telemetry import validate_timeline
+
+    doc = _timeline_gang(2, quick=True, pacing="fixed")
+    assert validate_timeline(doc) == []
+    assert doc["metadata"]["makespan_ticks"] == GANG_BC_MAKESPAN
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    tracks = {(e["pid"], e.get("tid", "")) for e in evs}
+    for dev in ("dev0", "dev1"):
+        assert (dev, "hart0") in tracks     # session transactions
+        assert (dev, "telem") in tracks     # telemetry lane frames
+        assert (dev, "nic") in tracks       # fabric halo exchanges
+        assert (dev, "counters") in tracks  # CtrSample counter track
+    assert ("gang", "supersteps") in tracks
+    # superstep spans tile the run: last round ends at the makespan
+    steps = [e for e in evs if e.get("tid") == "supersteps"]
+    assert steps and steps[-1]["args"]["wait_ticks"] >= 0
+
+
+def test_timeline_solo_and_validator_has_teeth():
+    """A solo hello timeline passes validation; a tampered document
+    (backwards ts, orphan E, orphan async end) is rejected with one
+    problem per defect."""
+    from repro.telemetry.__main__ import _timeline_solo
+    from repro.telemetry import validate_timeline
+
+    doc = _timeline_solo("hello", link="pcie", quick=True)
+    assert validate_timeline(doc) == []
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert {(e["pid"], e.get("tid", "")) for e in evs} >= {
+        ("session", "hart0"), ("session", "telem"),
+        ("session", "counters")}
+
+    bad = [
+        {"name": "a", "ph": "X", "pid": "p", "tid": "t",
+         "ts": 10.0, "dur": 1.0},
+        {"name": "b", "ph": "X", "pid": "p", "tid": "t",
+         "ts": 5.0, "dur": 1.0},                       # ts backwards
+        {"name": "c", "ph": "E", "pid": "p", "tid": "t",
+         "ts": 20.0},                                  # E without B
+        {"name": "d", "ph": "e", "pid": "p", "tid": "t",
+         "ts": 30.0, "cat": "x", "id": 1},             # async orphan
+    ]
+    problems = validate_timeline({"traceEvents": bad})
+    assert len(problems) == 3

@@ -20,12 +20,21 @@ def run_workload(name, argv_tail, mode="fase", n_cores=4, baud=921600,
                  target_opts=None, telemetry=None):
     """``target_opts`` are extra JaxTarget kwargs — the fast-path
     interpreter knobs (``fast_path``/``issue_width``/``block_words``/
-    ``block_cache``/``fetch_kernel``), e.g. straight from
+    ``block_cache``/``fetch_kernel``/``dtlb_ways``), e.g. straight from
     :func:`repro.configs.fase_rocket.target_kwargs`.  ``telemetry``
     arms the out-of-band bridges — a TelemetryHub kwargs dict, e.g.
-    :func:`repro.configs.fase_rocket.telemetry_kwargs`."""
+    :func:`repro.configs.fase_rocket.telemetry_kwargs`.
+    ``target="fleet-vmap"`` runs the workload on device 0 of a 1-device
+    vmapped :class:`~repro.core.fleet.vmap.FleetTarget` (the stacked
+    single-dispatch fleet path), which must stay tick-identical to the
+    plain JaxTarget fast path."""
     if target == "pysim":
         tgt = PySim(n_cores, mem)
+    elif target == "fleet-vmap":
+        from repro.core.fleet.vmap import FleetTarget
+        opts = dict(target_opts or {})
+        opts.pop("fast_path", None)      # the vmapped kernel IS the fast path
+        tgt = FleetTarget(1, n_cores, mem, **opts).view(0)
     else:
         from repro.core.interface import JaxTarget
         tgt = JaxTarget(n_cores, mem, **(target_opts or {}))

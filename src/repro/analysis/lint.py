@@ -28,8 +28,13 @@ HtpTransaction` builder surface, checked from its AST against
         ``get_*``) on a target receiver inside a lexical loop is the
         exact antipattern that makes host accessor overhead dominate
         (ROADMAP item 1: a RegR×31 context save must be one device
-        fetch, not 31 round trips).  Suppress a justified, bounded case
-        with ``# analysis: allow-host-sync`` on the offending line.
+        fetch, not 31 round trips).  Its write-side twin flags blocking
+        per-element mutators (``reg_write``/``csr_write``/
+        ``mem_write_word``/``page_*``) in loops — each is one blocking
+        ``device_put``; batch them into one staged ``commit_batch``
+        update (``host-sync-write``).  Suppress a justified, bounded
+        case with ``# analysis: allow-host-sync`` on the offending
+        line.
 
 Zero findings over the shipped tree is enforced by
 ``tests/test_analysis.py`` and the ``analysis-gate`` CI job.
@@ -50,6 +55,13 @@ SERVING_OPS = ("Redirect", "SetMMU", "PageCP", "PageS")
 BLOCKING_READS = frozenset({
     "reg_read", "csr_read", "mem_read_word", "page_read",
     "get_ticks", "get_uticks", "get_instret", "get_priv"})
+
+#: mutator names whose per-element use in a loop issues one blocking
+#: device_put each (the write-side twin of BLOCKING_READS): batch them
+#: into one staged ``commit_batch`` update instead
+BLOCKING_WRITES = frozenset({
+    "reg_write", "csr_write", "mem_write_word",
+    "page_write", "page_set", "page_copy"})
 
 #: line pragma that allowlists one justified host-sync site
 PRAGMA = "analysis: allow-host-sync"
@@ -260,7 +272,9 @@ def _scan_module(path: Path) -> list[LintFinding]:
                     "wire-size override on a non-virtual request "
                     "(overrides are for Layer-B serving analogues only)",
                     rel, call.lineno))
-    # host-sync: blocking target reads lexically inside a loop body
+    # host-sync: blocking target reads/writes lexically inside a loop
+    # body (reads serialize on device_get, writes on device_put — both
+    # have one-batch session surfaces: fetch_batch / commit_batch)
     for loop in ast.walk(tree):
         if not isinstance(loop, (ast.For, ast.While)):
             continue
@@ -268,21 +282,29 @@ def _scan_module(path: Path) -> list[LintFinding]:
             if node is loop or not isinstance(node, ast.Call):
                 continue
             fn = node.func
-            if not (isinstance(fn, ast.Attribute) and
-                    fn.attr in BLOCKING_READS):
+            if not isinstance(fn, ast.Attribute):
+                continue
+            if fn.attr in BLOCKING_READS:
+                code, noun, fix = ("host-sync", "read",
+                                   "one device fetch (see HtpSession "
+                                   "read batching)")
+            elif fn.attr in BLOCKING_WRITES:
+                code, noun, fix = ("host-sync-write", "write",
+                                   "one staged commit_batch update "
+                                   "(see HtpSession write batching)")
+            else:
                 continue
             if not _is_target_receiver(fn.value):
                 continue
-            line = lines[node.lineno - 1] if node.lineno <= len(lines) \
-                else ""
-            if PRAGMA in line:
+            span = lines[node.lineno - 1:
+                         getattr(node, "end_lineno", node.lineno)]
+            if any(PRAGMA in ln for ln in span):
                 continue
             out.append(LintFinding(
-                "host-sync",
-                f"per-element blocking device read "
+                code,
+                f"per-element blocking device {noun} "
                 f"`{ast.unparse(fn)}` inside a loop — batch it into "
-                f"one device fetch (see HtpSession read batching) or "
-                f"annotate `# {PRAGMA}`", rel, node.lineno))
+                f"{fix} or annotate `# {PRAGMA}`", rel, node.lineno))
     return out
 
 

@@ -28,7 +28,8 @@ _TARGET_RENAMED = {"target_fast_path": "fast_path",
                    "target_issue_width": "issue_width",
                    "target_block_words": "block_words",
                    "target_block_cache": "block_cache",
-                   "target_fetch_kernel": "fetch_kernel"}
+                   "target_fetch_kernel": "fetch_kernel",
+                   "target_dtlb_ways": "dtlb_ways"}
 
 
 def target_kwargs(cfg: dict = FASE_ROCKET) -> dict:
@@ -76,9 +77,21 @@ _FLEET_RENAMED = {"device_links": "links"}
 def fleet_kwargs(cfg: dict = FASE_FLEET) -> dict:
     """Keyword surface of ``FleetRuntime`` from a registry target config
     (the caller supplies ``make_target``).  Per-device queue pairs reuse
-    the config's link/session/queue-pair knobs."""
+    the config's link/session/queue-pair knobs.  When the config sets
+    ``fleet_vmap`` (FASE_FLEET_VMAP) the output also carries
+    ``fleet_vmap=True`` plus a ``target_cfg`` derived from the config's
+    ``n_cores``/``mem_bytes`` and target_* knobs, so
+    ``FleetRuntime(**fleet_kwargs(cfg))`` builds the stacked
+    single-dispatch :class:`~repro.core.fleet.vmap.FleetTarget` with no
+    ``make_target`` at all."""
     out = runtime_kwargs(cfg)
     out.update({k: cfg[k] for k in _FLEET_KEYS if k in cfg})
     out.update({new: cfg[old] for old, new in _FLEET_RENAMED.items()
                 if old in cfg and cfg[old] is not None})
+    if cfg.get("fleet_vmap"):
+        tk = target_kwargs(cfg)
+        tk.pop("fast_path", None)   # the vmapped kernel IS the fast path
+        out["fleet_vmap"] = True
+        out["target_cfg"] = dict(n_cores=cfg["n_cores"],
+                                 mem_bytes=cfg["mem_bytes"], **tk)
     return out

@@ -89,7 +89,7 @@ FASE_ROCKET = dict(n_cores=4, mem_bytes=1 << 26, clock_hz=100_000_000,
                    session="async", qp_depth=8, qp_coalesce_ticks=50,
                    target_fast_path=True, target_issue_width=8,
                    target_block_words=16, target_block_cache=True,
-                   target_fetch_kernel="ref",
+                   target_fetch_kernel="ref", target_dtlb_ways=8,
                    telem_interval_ticks=100_000, telem_bandwidth_frac=0.1,
                    telem_trace_slots=4096, telem_backlog_ticks=1 << 20)
 
@@ -111,6 +111,13 @@ FASE_ROCKET_PCIE = {**FASE_ROCKET, "link": "pcie", "qp_depth": 16,
 FASE_FLEET = {**FASE_ROCKET_PCIE, "n_devices": 4,
               "placement": "round_robin", "device_links": None,
               "provision_us": 0.0}
+
+# vmapped fleet: all boards' targets live in ONE stacked CpuState and a
+# global chunk across the fleet is a single XLA dispatch
+# (repro.core.fleet.vmap.FleetTarget, ROADMAP item 1).  Bit-identical to
+# FASE_FLEET; ``fase_rocket.fleet_kwargs`` derives the FleetTarget's
+# target_cfg from the config's n_cores/mem_bytes/target_* knobs.
+FASE_FLEET_VMAP = {**FASE_FLEET, "fleet_vmap": True}
 
 # provisioning-aware fleet: bitstream flash + ELF load cost several ms of
 # modelled time per re-image, and the provision-aware least_loaded policy

@@ -263,19 +263,23 @@ class AsyncHtpSession(HtpSession):
         result = TransactionResult(done=ready)
         cum_bytes = 0
         reads = self._prefetch_reads(txn)
-        for i, req in enumerate(txn.requests):
-            nbytes = req.wire_bytes(self.direct_mode)
-            ch.account(nbytes, f"htp:{req.op}")
-            if req.category:
-                ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
-            self.stats.count(req.op, req.virtual)
-            self.stats.controller_cycles += req.ctrl_cycles
-            cum_bytes += nbytes
-            arrive = wire_start + ch.ticks_for_bytes(cum_bytes)
-            done = max(arrive, s.ctrl_free) + req.ctrl_cycles
-            s.ctrl_free = done
-            result.ticks.append(done)
-            result.values.append(self._apply(req, done, reads, i))
+        self._stage_begin(txn)
+        try:
+            for i, req in enumerate(txn.requests):
+                nbytes = req.wire_bytes(self.direct_mode)
+                ch.account(nbytes, f"htp:{req.op}")
+                if req.category:
+                    ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
+                self.stats.count(req.op, req.virtual)
+                self.stats.controller_cycles += req.ctrl_cycles
+                cum_bytes += nbytes
+                arrive = wire_start + ch.ticks_for_bytes(cum_bytes)
+                done = max(arrive, s.ctrl_free) + req.ctrl_cycles
+                s.ctrl_free = done
+                result.ticks.append(done)
+                result.values.append(self._apply(req, done, reads, i))
+        finally:
+            self._stage_end()
         self._wire_free = wire_start + ch.ticks_for_bytes(cum_bytes)
         ch.busy_until = max(ch.busy_until, self._wire_free)
         self.stats.uart_ticks += max(0, self._wire_free - ready)

@@ -60,3 +60,4 @@ from .placement import (POLICIES, AffinityPolicy,           # noqa: F401
 from .router import FleetRouter                             # noqa: F401
 from .runtime import (FleetReport, FleetRuntime, Job,       # noqa: F401
                       JobResult, MigrationReport, RunningJob)
+from .vmap import FleetTarget, FleetTargetView              # noqa: F401

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .. import snapshot as snapmod
 from ..target.cpu import CLOCK_HZ
 from ..workloads import build
@@ -132,13 +134,36 @@ class FleetRuntime:
                  coalesce_ticks: int = 50, hfutex: bool = True,
                  provision_us: float = 0.0,
                  runtime_kwargs: dict | None = None,
-                 fabric=None):
+                 fabric=None, fleet_vmap: bool = False,
+                 target_cfg: dict | None = None):
+        # fleet_vmap=True (ROADMAP item 1): every device's target is a
+        # per-device view over ONE stacked, vmapped CpuState
+        # (repro.core.fleet.vmap.FleetTarget) — a global chunk across the
+        # whole fleet is a single XLA dispatch, and device provisioning
+        # resets that device's lane.  ``target_cfg`` carries the
+        # FleetTarget kwargs (n_cores, mem_bytes, interpreter knobs).
+        # Semantics are bit-identical to per-device JaxTargets.
+        self.fleet_target = None
+        if fleet_vmap:
+            from .vmap import FleetTarget
+            assert devices is None, \
+                "fleet_vmap builds its own devices from target_cfg"
+            assert target_cfg, \
+                "fleet_vmap=True needs target_cfg (n_cores, mem_bytes, …)"
+            self.fleet_target = FleetTarget(n_devices, **target_cfg)
+            make_target = None
         if devices is None:
-            assert make_target is not None, \
+            assert make_target is not None or self.fleet_target, \
                 "need make_target (device factory) or explicit devices"
             if links is not None:
                 assert len(links) == n_devices, "one link per device"
-            devices = [Device(i, make_target,
+
+            def factory(i):
+                if self.fleet_target is not None:
+                    return lambda: self.fleet_target.provision_view(i)
+                return make_target
+
+            devices = [Device(i, factory(i),
                               link=links[i] if links else link, baud=baud,
                               session=session, queue_depth=queue_depth,
                               coalesce_ticks=coalesce_ticks, hfutex=hfutex,
@@ -214,6 +239,54 @@ class FleetRuntime:
     def run_job(self, device: Device, job: Job) -> JobResult:
         """Run one job on one device (fresh queue pair, full runtime)."""
         return self.finish_job(self.start_job(job, device))
+
+    def run_synchronous(self, jobs: list[Job],
+                        max_ticks: int = 1 << 48) -> list[JobResult]:
+        """Fleet-lockstep execution over the vmapped stack (ROADMAP
+        item 1): one job per device, and every global chunk advances
+        all live devices in a SINGLE XLA dispatch
+        (:meth:`FleetTarget.run_global`) instead of N one-hot ones.
+
+        Each iteration runs every live runtime's pre-chunk host phase
+        (:meth:`~repro.core.runtime.FaseRuntime.chunk_begin`), batches
+        the per-device cycle budgets into one ``run_global``, then runs
+        every post-chunk phase (exception handling).  A device whose
+        job exited — or whose host side must idle on async I/O — gets
+        budget 0, which leaves its lane bit-exactly untouched, so each
+        job's modelled timeline is identical to the solo per-device
+        path tick for tick (``tests/test_cpu_differential.py``)."""
+        assert self.fleet_target is not None, \
+            "run_synchronous needs fleet_vmap=True"
+        assert len(jobs) <= len(self.devices), "one device per job"
+        for j in jobs:
+            if j.job_id < 0:
+                j.job_id = self._next_id
+                self._next_id += 1
+        handles = [self.start_job(j, d)
+                   for j, d in zip(jobs, self.devices)]
+        results: list[JobResult | None] = [None] * len(handles)
+        budgets = np.zeros(self.fleet_target.n_devices, np.uint64)
+        while any(r is None for r in results):
+            budgets[:] = 0
+            for i, h in enumerate(handles):
+                if results[i] is not None:
+                    continue
+                want = h.runtime.chunk_begin()
+                if want is None:
+                    results[i] = self._retire(h, h.runtime.finish())
+                elif want:
+                    budgets[h.runtime.target.d] = \
+                        h.runtime.target.chunk_cycles
+            if budgets.any():
+                self.fleet_target.run_global(budgets)
+            for h in handles:
+                if budgets[h.runtime.target.d]:
+                    tk = h.runtime.target.get_ticks()  # analysis: allow-host-sync
+                    if tk > max_ticks:
+                        raise TimeoutError(
+                            f"device {h.device.id} exceeded {max_ticks}")
+                    h.runtime.chunk_end()
+        return results
 
     # -- gang scheduling (requires a fabric) -----------------------------
     def start_gang(self, gang):

@@ -1,0 +1,352 @@
+"""Fleet-wide single-dispatch batched execution (ROADMAP item 1).
+
+An N-board fleet used to run N Python-driven sessions, each dispatching
+its own ``run_chunk_fast`` — N XLA dispatches per global chunk and N
+copies of the host-side driver loop.  This module is the
+FireSim-metasim shape instead: ONE stacked :class:`CpuState` whose
+every array carries a leading device axis ``(D, ...)``, executed by
+:func:`repro.core.target.cpu.run_chunk_fleet` — the fast-path
+interpreter run as one flat machine of ``D * n_cores`` lanes (the
+device axis folded into the lane axis; ``jax.vmap`` of the chunk loop
+is catastrophically slow on XLA:CPU, see ``run_chunk_fleet``) with
+per-device cycle budgets — so a global chunk is exactly one XLA
+dispatch (``FleetTarget.dispatch_count`` counts them; the conformance
+suite asserts N=4 devices advance in a single dispatch).
+
+Two classes:
+
+  * :class:`FleetTarget` — owns the stacked state and the global
+    dispatch (`run_global`);
+  * :class:`FleetTargetView` — the per-device façade implementing the
+    full :class:`~repro.core.interface.Target` protocol against device
+    ``d``'s slice of the stack, so a :class:`~repro.core.fleet.device.\
+Device`/:class:`~repro.core.cq.AsyncHtpSession`/runtime stack drives it
+    exactly like a :class:`~repro.core.interface.JaxTarget`.
+
+Semantics are bit-identical to D independent ``JaxTarget``\\ s: devices
+are shared-nothing inside the flat kernel (every cross-lane interaction
+is masked to same-device pairs), a view's ``run`` issues a one-hot
+budget vector, and a device whose budget is 0 never gates a lane in, so
+its state rides through *unchanged* — which is what keeps every golden
+tick when devices take turns.  Batching budgets via ``run_global`` (all
+devices at once) is the single-dispatch fleet chunk.
+
+Commit-trace capture (``trace_arm``) stays a single-device affair — the
+fleet kernel does not plumb the trace ring, and a view refuses to arm.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..interface import pack_read_batch, pack_write_batch, \
+    unpack_read_batch
+from ..target import cpu as _cpu
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+
+@partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def _fleet_write_batch(sts: "_cpu.CpuState", d, csr_names: tuple,
+                       reg_cpu, reg_idx, reg_val,
+                       word_idx, word_val, csr_cpus, csr_vals):
+    """Device-``d`` twin of :func:`repro.core.target.cpu.\
+apply_write_batch` over the stacked fleet state: same pow2-padded
+    arrays, same out-of-bounds drop sentinels, scattered at ``(d, ...)``
+    in one donated update."""
+    regs = sts.regs.at[d, reg_cpu, reg_idx].set(
+        jnp.asarray(reg_val, U64), mode="drop")
+    mem = sts.mem.at[d, word_idx].set(
+        jnp.asarray(word_val, U64), mode="drop")
+    sts = sts._replace(regs=regs, mem=mem)
+    for name, cc, vv in zip(csr_names, csr_cpus, csr_vals):
+        vv = jnp.asarray(vv, U64)
+        if name == "pending":
+            field = sts.pending.at[d, cc].set(vv != 0, mode="drop")
+        elif name == "priv":
+            field = sts.priv.at[d, cc].set(vv.astype(U32), mode="drop")
+        else:
+            field = getattr(sts, name).at[d, cc].set(vv, mode="drop")
+        sts = sts._replace(**{name: field})
+    return sts
+
+
+# Device-indexed twins of the cpu.py host micro-ops (redirect / park /
+# clear-pending / csr write): one donated jitted dispatch each, applied
+# at (d, ...) of the stacked state.
+@partial(jax.jit, donate_argnums=(0,))
+def _fleet_redirect_op(sts, d, c, pc, resume):
+    return sts._replace(
+        pc=sts.pc.at[d, c].set(pc),
+        priv=sts.priv.at[d, c].set(U32(0)),
+        pending=sts.pending.at[d, c].set(False),
+        stall_until=sts.stall_until.at[d, c].set(resume))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _fleet_park_op(sts, d, c):
+    return sts._replace(priv=sts.priv.at[d, c].set(U32(3)),
+                        pending=sts.pending.at[d, c].set(False))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _fleet_clear_pending_op(sts, d, c):
+    return sts._replace(pending=sts.pending.at[d, c].set(False))
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def _fleet_csr_write_op(sts, name, d, c, v):
+    if name == "ticks":
+        return sts._replace(ticks=sts.ticks.at[d].set(jnp.asarray(v, U64)))
+    if name == "pending":
+        val = jnp.asarray(v, U64) != 0
+    elif name == "priv":
+        val = jnp.asarray(v, U32)
+    else:
+        val = jnp.asarray(v, U64)
+    return sts._replace(**{name: getattr(sts, name).at[d, c].set(val)})
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _fleet_reg_write_op(sts, d, c, idx, v):
+    return sts._replace(regs=sts.regs.at[d, c, idx].set(v))
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _fleet_fetch_read_batch(sts, d, csr_names: tuple,
+                            reg_cpu, reg_idx, word_idx, csr_cpus):
+    """Device-``d`` twin of :func:`repro.core.target.cpu.\
+fetch_read_batch` over the stacked fleet state: same pow2-padded gather
+    arrays, indexed at ``(d, ...)``, one compiled dispatch."""
+    regs = sts.regs[d, reg_cpu, reg_idx]
+    words = sts.mem[d, word_idx]
+    csr_out = []
+    for name, cc in zip(csr_names, csr_cpus):
+        if name == "ticks":
+            v = jnp.broadcast_to(sts.ticks[d], cc.shape).astype(U64)
+        else:
+            v = getattr(sts, name)[d, cc].astype(U64)
+        csr_out.append(v)
+    return regs, words, tuple(csr_out)
+
+
+class FleetTarget:
+    """The stacked-state owner: D devices' CPU state in one pytree, one
+    XLA dispatch per global chunk.
+
+    ``view(d)`` hands out the per-device Target façade; ``run_global``
+    advances every device by its budget in a single compiled call.
+    ``fast_path`` is implied (the vmapped kernel IS the fast path), and
+    ``fetch_kernel`` defaults to the pure-jnp oracle."""
+
+    def __init__(self, n_devices: int, n_cores: int, mem_bytes: int,
+                 chunk_cycles: int = 1 << 30, issue_width: int = 8,
+                 block_words: int = 16, block_cache: bool = True,
+                 fetch_kernel: str = "ref", dtlb_ways: int = 8):
+        self.n_devices = n_devices
+        self.n_cores = n_cores
+        self.mem_bytes = mem_bytes
+        self.chunk_cycles = chunk_cycles
+        self.issue_width = issue_width
+        self.block_words = block_words
+        self.block_cache = block_cache
+        self.fetch_kernel = fetch_kernel
+        self.dtlb_ways = dtlb_ways
+        base = _cpu.make_state(n_cores, mem_bytes)
+        self.sts = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_devices), base)
+        #: XLA dispatches of the vmapped chunk kernel (the
+        #: one-dispatch-per-global-chunk acceptance counter)
+        self.dispatch_count = 0
+        self._views = [FleetTargetView(self, d) for d in range(n_devices)]
+
+    def view(self, d: int) -> "FleetTargetView":
+        return self._views[d]
+
+    def provision_view(self, d: int) -> "FleetTargetView":
+        """Reset device ``d``'s lane to power-on state (the fleet-vmap
+        analogue of a Device.provision building a fresh target) and
+        return its view."""
+        fresh = _cpu.make_state(self.n_cores, self.mem_bytes)
+        self.sts = jax.tree_util.tree_map(
+            lambda s, f: s.at[d].set(f), self.sts, fresh)
+        return self._views[d]
+
+    def run_global(self, budgets) -> None:
+        """ONE dispatch for the whole fleet: advance device ``i`` by up
+        to ``budgets[i]`` cycles (0 = bit-exactly untouched)."""
+        budgets = np.minimum(np.asarray(budgets, np.uint64),
+                             np.uint64(self.chunk_cycles))
+        self.sts = _cpu.run_chunk_fleet(
+            self.sts, self.n_cores, self.mem_bytes, budgets,
+            self.issue_width, self.block_words, self.block_cache,
+            self.fetch_kernel, self.dtlb_ways, self.n_devices)
+        self.dispatch_count += 1
+
+
+class FleetTargetView:
+    """Device ``d``'s full Target-protocol façade over the stack.
+
+    Every accessor indexes the stacked arrays at ``(d, ...)``; ``run``
+    issues a one-hot global dispatch.  Drop-in for
+    :class:`~repro.core.interface.JaxTarget` behind a queue pair."""
+
+    def __init__(self, ft: FleetTarget, d: int):
+        self.ft = ft
+        self.d = d
+        self.nc = ft.n_cores
+        self.mem_bytes = ft.mem_bytes
+        self.chunk_cycles = ft.chunk_cycles
+        self.fast_path = True
+        self.trace_slots = 0
+
+    @property
+    def n_cores(self):
+        return self.nc
+
+    @property
+    def st(self):
+        """This device's :class:`CpuState` slice (conformance-suite
+        surface: ``assert_same_state`` reads ``st.mem``)."""
+        return jax.tree_util.tree_map(lambda x: x[self.d], self.ft.sts)
+
+    # -- inst stream ------------------------------------------------------
+    def run(self, max_cycles: int = 1 << 62):
+        budgets = np.zeros(self.ft.n_devices, np.uint64)
+        budgets[self.d] = min(max_cycles, self.chunk_cycles)
+        self.ft.run_global(budgets)
+
+    def redirect(self, c, pc, resume_tick=0):
+        self.ft.sts = _fleet_redirect_op(
+            self.ft.sts, np.int32(self.d), np.int32(c), np.uint64(pc),
+            np.uint64(max(resume_tick, 0)))
+
+    def park(self, c):
+        self.ft.sts = _fleet_park_op(self.ft.sts, np.int32(self.d),
+                                     np.int32(c))
+
+    def pending_cores(self):
+        return list(np.nonzero(np.asarray(self.ft.sts.pending[self.d]))[0])
+
+    def clear_pending(self, c):
+        self.ft.sts = _fleet_clear_pending_op(
+            self.ft.sts, np.int32(self.d), np.int32(c))
+
+    # -- priv / csr -------------------------------------------------------
+    def csr_read(self, c, name):
+        return self.fetch_batch(csrs=[(c, name)])[1][0]
+
+    def get_priv(self, c):
+        return int(np.asarray(self.ft.sts.priv[self.d, c]))
+
+    def csr_write(self, c, name, v):
+        self.ft.sts = _fleet_csr_write_op(
+            self.ft.sts, name, np.int32(self.d), np.int32(c),
+            np.uint64(v & ((1 << 64) - 1)))
+
+    def set_satp(self, c, v):
+        self.ft.sts = _fleet_csr_write_op(
+            self.ft.sts, "satp", np.int32(self.d), np.int32(c),
+            np.uint64(v))
+
+    def sfence(self, c):
+        # chunk-local caches only (fetch blocks + DTlb inside one
+        # run_chunk_fleet call): host-driven PTE changes are visible to
+        # the next chunk by construction, same as JaxTarget.sfence
+        pass
+
+    # -- regs -------------------------------------------------------------
+    def reg_read(self, c, idx):
+        return self.fetch_batch(regs=[(c, idx)])[0][0]
+
+    def reg_write(self, c, idx, v):
+        if idx != 0:
+            self.ft.sts = _fleet_reg_write_op(
+                self.ft.sts, np.int32(self.d), np.int32(c),
+                np.int32(idx), np.uint64(v & ((1 << 64) - 1)))
+
+    def fetch_batch(self, regs=(), csrs=(), words=()):
+        """One blocking device sync for any read mix on this device —
+        see :meth:`repro.core.interface.JaxTarget.fetch_batch`."""
+        regs, words = list(regs), list(words)
+        packed = pack_read_batch(regs, csrs, words)
+        if packed is None:
+            return [], [], []
+        names, reg_cpu, reg_idx, word_idx, csr_cpus, order = packed
+        got = jax.device_get(_fleet_fetch_read_batch(
+            self.ft.sts, np.int32(self.d), names,
+            reg_cpu, reg_idx, word_idx, csr_cpus))
+        return unpack_read_batch(got, len(regs), len(words), names,
+                                 order)
+
+    def commit_batch(self, regs=(), csrs=(), words=()):
+        """One donated device update for any staged write mix on this
+        device — see :meth:`repro.core.interface.JaxTarget.\
+commit_batch`."""
+        packed = pack_write_batch(self.nc, self.mem_bytes >> 3,
+                                  regs, csrs, words)
+        if packed is not None:
+            self.ft.sts = _fleet_write_batch(
+                self.ft.sts, jnp.int32(self.d), *packed)
+
+    # -- memory -----------------------------------------------------------
+    def mem_read_word(self, pa):
+        return self.fetch_batch(words=[pa])[2][0]
+
+    def mem_write_word(self, pa, v):
+        sts = self.ft.sts
+        self.ft.sts = sts._replace(
+            mem=sts.mem.at[self.d, pa >> 3].set(np.uint64(v)))
+
+    def page_read(self, ppn):
+        return np.asarray(lax.dynamic_slice(
+            self.ft.sts.mem, (self.d, (ppn << 12) >> 3), (1, 512))[0])
+
+    def page_write(self, ppn, words):
+        w = jnp.asarray(np.ascontiguousarray(words, dtype=np.uint64))
+        sts = self.ft.sts
+        self.ft.sts = sts._replace(mem=lax.dynamic_update_slice(
+            sts.mem, w[None, :], (self.d, (ppn << 12) >> 3)))
+
+    def page_set(self, ppn, val):
+        sts = self.ft.sts
+        self.ft.sts = sts._replace(mem=lax.dynamic_update_slice(
+            sts.mem, jnp.full((1, 512), np.uint64(val), U64),
+            (self.d, (ppn << 12) >> 3)))
+
+    def page_copy(self, src_ppn, dst_ppn):
+        sts = self.ft.sts
+        page = lax.dynamic_slice(sts.mem, (self.d, (src_ppn << 12) >> 3),
+                                 (1, 512))
+        self.ft.sts = sts._replace(mem=lax.dynamic_update_slice(
+            sts.mem, page, (self.d, (dst_ppn << 12) >> 3)))
+
+    # -- perf -------------------------------------------------------------
+    def get_ticks(self):
+        return int(np.asarray(self.ft.sts.ticks[self.d]))
+
+    def get_uticks(self, c):
+        return int(np.asarray(self.ft.sts.uticks[self.d, c]))
+
+    def get_instret(self, c):
+        return int(np.asarray(self.ft.sts.instret[self.d, c]))
+
+    # -- telemetry --------------------------------------------------------
+    def trace_arm(self, slots):
+        raise NotImplementedError(
+            "commit-trace capture is single-device; run this device on a "
+            "plain JaxTarget (fleet_vmap=False) to arm the trace ring")
+
+    def trace_trigger(self, spec):
+        if spec is not None:
+            self.trace_arm(0)
+
+    def trace_drain(self, c=None, limit=None):
+        # unarmed ring, mirroring JaxTarget.trace_drain's unarmed path
+        return ([], 0) if c is not None else [([], 0)] * self.nc

@@ -32,6 +32,97 @@ import jax
 import jax.numpy as jnp
 
 
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def pack_write_batch(nc, mem_words, regs=(), csrs=(), words=()):
+    """Pack a staged transaction's writes into pow2-padded scatter arrays
+    for :func:`repro.core.target.cpu.apply_write_batch` (and its fleet
+    twin).  Pad entries carry out-of-bounds drop sentinels: reg/csr cpu
+    = ``nc``, word index = ``mem_words``.  Returns ``(csr_names,
+    reg_cpu, reg_idx, reg_val, word_idx, word_val, csr_cpus, csr_vals)``
+    or None when there is nothing to commit."""
+    regs, csrs, words = list(regs), list(csrs), list(words)
+    if not (regs or csrs or words):
+        return None
+    rp = _pow2(max(len(regs), 1))
+    reg_cpu = np.full(rp, nc, np.int32)
+    reg_idx = np.zeros(rp, np.int32)
+    reg_val = np.zeros(rp, np.uint64)
+    for i, (c, idx, v) in enumerate(regs):
+        reg_cpu[i], reg_idx[i], reg_val[i] = c, idx, np.uint64(v)
+    wp = _pow2(max(len(words), 1))
+    word_idx = np.full(wp, mem_words, np.int64)
+    word_val = np.zeros(wp, np.uint64)
+    for i, (w, v) in enumerate(words):
+        word_idx[i], word_val[i] = w, np.uint64(v)
+    by_name: dict = {}
+    for c, name, v in csrs:
+        by_name.setdefault(name, []).append((c, v))
+    names = tuple(sorted(by_name))
+    csr_cpus, csr_vals = [], []
+    for name in names:
+        pairs = by_name[name]
+        cp = _pow2(len(pairs))
+        cc = np.full(cp, nc, np.int32)
+        vv = np.zeros(cp, np.uint64)
+        for i, (c, v) in enumerate(pairs):
+            cc[i], vv[i] = c, np.uint64(int(v))
+        csr_cpus.append(cc)
+        csr_vals.append(vv)
+    return (names, reg_cpu, reg_idx, reg_val, word_idx, word_val,
+            tuple(csr_cpus), tuple(csr_vals))
+
+
+def pack_read_batch(regs=(), csrs=(), words=()):
+    """Pack a read mix into pow2-padded gather arrays for
+    :func:`repro.core.target.cpu.fetch_read_batch` (and its fleet twin).
+    Pad entries index slot 0 (always valid; the host discards the tail).
+    Returns ``(csr_names, reg_cpu, reg_idx, word_idx, csr_cpus, order)``
+    where ``order`` is the per-input-csr ``(name, slot)`` list used to
+    restore input order, or None when there is nothing to read."""
+    regs, csrs, words = list(regs), list(csrs), list(words)
+    if not (regs or csrs or words):
+        return None
+    rp = _pow2(max(len(regs), 1))
+    reg_cpu = np.zeros(rp, np.int32)
+    reg_idx = np.zeros(rp, np.int32)
+    for i, (c, ix) in enumerate(regs):
+        reg_cpu[i], reg_idx[i] = c, ix
+    wp = _pow2(max(len(words), 1))
+    word_idx = np.zeros(wp, np.int64)
+    for i, pa in enumerate(words):
+        word_idx[i] = pa >> 3
+    by_name: dict = {}
+    order = []                     # (name, slot) per input csr
+    for c, name in csrs:
+        lst = by_name.setdefault(name, [])
+        order.append((name, len(lst)))
+        lst.append(c)
+    names = tuple(sorted(by_name))
+    csr_cpus = []
+    for name in names:
+        cp = _pow2(max(len(by_name[name]), 1))
+        cc = np.zeros(cp, np.int32)
+        cc[:len(by_name[name])] = by_name[name]
+        csr_cpus.append(cc)
+    return names, reg_cpu, reg_idx, word_idx, tuple(csr_cpus), order
+
+
+def unpack_read_batch(got, n_regs, n_words, names, order):
+    """Restore a :func:`pack_read_batch` gather result to the caller's
+    three input-ordered int lists."""
+    rv, wv, cv = got
+    pos = {name: k for k, name in enumerate(names)}
+    return ([int(v) for v in rv[:n_regs]],
+            [int(cv[pos[name]][slot]) for name, slot in order],
+            [int(v) for v in wv[:n_words]])
+
+
 class Target(Protocol):
     """Host-visible surface of a FASE-instrumented target processor."""
 
@@ -53,6 +144,8 @@ class Target(Protocol):
     def reg_write(self, c: int, idx: int, v: int) -> None: ...
     # Batched host reads (one device sync for any mix of reads) ------------
     def fetch_batch(self, regs=(), csrs=(), words=()) -> tuple: ...
+    # Batched host writes (one device update for a staged transaction) -----
+    def commit_batch(self, regs=(), csrs=(), words=()) -> None: ...
     # Word / page data access (via injected ld/sd — behavioural) ----------
     def mem_read_word(self, pa: int) -> int: ...
     def mem_write_word(self, pa: int, v: int) -> None: ...
@@ -91,13 +184,16 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         instruction fetch,
       * ``fetch_kernel`` — ``"ref"`` (jnp oracle) or ``"pallas"`` for
         the block-fill translate/fetch chain
-        (:mod:`repro.kernels.page_walk`).
+        (:mod:`repro.kernels.page_walk`),
+      * ``dtlb_ways`` — per-lane data-translation cache ways in the fast
+        path (power of 2; 0 disables and re-walks every load/store).
     """
 
     def __init__(self, n_cores: int, mem_bytes: int,
                  chunk_cycles: int = 1 << 30, fast_path: bool = True,
                  issue_width: int = 8, block_words: int = 16,
-                 block_cache: bool = True, fetch_kernel: str = "ref"):
+                 block_cache: bool = True, fetch_kernel: str = "ref",
+                 dtlb_ways: int = 8):
         self.nc = n_cores
         self.mem_bytes = mem_bytes
         self.chunk_cycles = chunk_cycles
@@ -106,6 +202,7 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         self.block_words = block_words
         self.block_cache = block_cache
         self.fetch_kernel = fetch_kernel
+        self.dtlb_ways = dtlb_ways
         self.trace_slots = 0          # commit-trace ring, off by default
         self._trace_base: list = []
         self._trigger: tuple | None = None   # capture-window predicate
@@ -123,35 +220,31 @@ PySim` — the knobs trade compile time and host speed, never semantics:
                 self.st, self.nc, self.mem_bytes, budget,
                 self.issue_width, self.block_words, self.block_cache,
                 self.fetch_kernel, self.trace_slots > 0,
-                self._trigger if self.trace_slots > 0 else None)
+                self._trigger if self.trace_slots > 0 else None,
+                self.dtlb_ways)
         else:
             self.st = _cpu.run_chunk(self.st, self.nc, self.mem_bytes,
                                      budget)
 
     def redirect(self, c, pc, resume_tick=0):
-        st = self.st
-        self.st = st._replace(
-            pc=st.pc.at[c].set(np.uint64(pc)),
-            priv=st.priv.at[c].set(np.uint32(0)),
-            pending=st.pending.at[c].set(False),
-            stall_until=st.stall_until.at[c].set(np.uint64(max(resume_tick,
-                                                               0))),
-        )
+        # one donated jitted dispatch, not four eager scatters
+        self.st = _cpu.redirect_op(self.st, np.int32(c), np.uint64(pc),
+                                   np.uint64(max(resume_tick, 0)))
 
     def park(self, c):
-        st = self.st
-        self.st = st._replace(priv=st.priv.at[c].set(np.uint32(3)),
-                              pending=st.pending.at[c].set(False))
+        self.st = _cpu.park_op(self.st, np.int32(c))
 
     def pending_cores(self):
         return list(np.nonzero(np.asarray(self.st.pending))[0])
 
     def clear_pending(self, c):
-        self.st = self.st._replace(pending=self.st.pending.at[c].set(False))
+        self.st = _cpu.clear_pending_op(self.st, np.int32(c))
 
     # -- priv / csr ---------------------------------------------------------
     def csr_read(self, c, name):
-        return int(np.asarray(getattr(self.st, name)[c]))
+        # the 1-element batched gather: a jitted dispatch is several
+        # times cheaper than an eager un-jitted __getitem__
+        return self.fetch_batch(csrs=[(c, name)])[1][0]
 
     def get_priv(self, c):
         return int(np.asarray(self.st.priv[c]))
@@ -159,33 +252,25 @@ PySim` — the knobs trade compile time and host speed, never semantics:
     def csr_write(self, c, name, v):
         """Host-side CSR/core-state write (CsrW's device half; snapshot
         restore).  Each field keeps its device dtype; ``ticks`` is the
-        global clock scalar."""
-        st = self.st
-        if name == "ticks":
-            self.st = st._replace(ticks=jnp.uint64(v))
-            return
-        arr = getattr(st, name)
-        if name == "pending":
-            val = bool(v)
-        elif name == "priv":
-            val = np.uint32(v)
-        else:
-            val = np.uint64(v)
-        self.st = st._replace(**{name: arr.at[c].set(val)})
+        global clock scalar.  One jitted donated dispatch per write."""
+        self.st = _cpu.csr_write_op(self.st, name, np.int32(c),
+                                    np.uint64(v & ((1 << 64) - 1)))
 
     def set_satp(self, c, v):
-        self.st = self.st._replace(satp=self.st.satp.at[c].set(np.uint64(v)))
+        self.st = _cpu.csr_write_op(self.st, "satp", np.int32(c),
+                                    np.uint64(v))
 
     def sfence(self, c):
         # nothing cached across chunks: the slow path walks every access
-        # and the fast path's fetch-block cache lives only inside one
-        # run_chunk_fast call, so any host-driven PTE change is visible
-        # by construction
+        # and the fast path's fetch-block cache AND data-translation
+        # cache (DTlb) both live only inside one run_chunk_fast call, so
+        # any host-driven PTE change is visible by construction — the
+        # next chunk starts with empty caches
         pass
 
     # -- regs -----------------------------------------------------------------
     def reg_read(self, c, idx):
-        return int(np.asarray(self.st.regs[c, idx]))
+        return self.fetch_batch(regs=[(c, idx)])[0][0]
 
     def fetch_batch(self, regs=(), csrs=(), words=()):
         """Batched host reads: ONE blocking device sync for any mix of
@@ -194,31 +279,46 @@ PySim` — the knobs trade compile time and host speed, never semantics:
         Returns three int lists in input order, bit-identical to the
         per-element accessors — this is the device half of the session
         layer's read batching (ROADMAP item 1): a RegR×31 context save
-        is one transfer, not 31 round trips."""
-        st = self.st
-        bundle = {}
-        if regs:
-            cs = jnp.asarray([c for c, _ in regs], dtype=jnp.int32)
-            ix = jnp.asarray([i for _, i in regs], dtype=jnp.int32)
-            bundle["regs"] = st.regs[cs, ix]
-        if csrs:
-            bundle["csrs"] = [getattr(st, name)[c] for c, name in csrs]
-        if words:
-            bundle["words"] = st.mem[
-                jnp.asarray([pa >> 3 for pa in words])]
-        out = jax.device_get(bundle)
-        return ([int(v) for v in out.get("regs", ())],
-                [int(v) for v in out.get("csrs", ())],
-                [int(v) for v in out.get("words", ())])
+        is one transfer, not 31 round trips.  Index arrays are
+        pow2-padded into one jitted gather
+        (:func:`repro.core.target.cpu.fetch_read_batch`), so a handful
+        of compiled shapes serve every request mix — per-element eager
+        gathers would pay one dispatch each and one compile per size."""
+        regs, words = list(regs), list(words)
+        packed = pack_read_batch(regs, csrs, words)
+        if packed is None:
+            return [], [], []
+        names, reg_cpu, reg_idx, word_idx, csr_cpus, order = packed
+        got = jax.device_get(_cpu.fetch_read_batch(
+            self.st, names, reg_cpu, reg_idx, word_idx, csr_cpus))
+        return unpack_read_batch(got, len(regs), len(words), names, order)
 
     def reg_write(self, c, idx, v):
         if idx != 0:
-            self.st = self.st._replace(
-                regs=self.st.regs.at[c, idx].set(np.uint64(v)))
+            self.st = _cpu.reg_write_op(self.st, np.int32(c),
+                                        np.int32(idx),
+                                        np.uint64(v & ((1 << 64) - 1)))
+
+    def commit_batch(self, regs=(), csrs=(), words=()):
+        """Batched host writes: ONE donated device update for any mix of
+        GPRs (``(core, idx, val)``), CSR/core-state fields
+        (``(core, name, val)``) and physical memory words
+        (``(word_index, val)``) — the write-side twin of
+        :meth:`fetch_batch` and the device half of the session layer's
+        staged write batching (ROADMAP item 1).  Callers guarantee
+        unique indices per array (the stage is dict-keyed), values are
+        64-bit-masked, and ``x0``/``ticks`` never appear; arrays are
+        pow2-padded with out-of-bounds drop sentinels so a handful of
+        shapes serve every transaction.  Bit-identical to replaying the
+        per-element accessors in order."""
+        packed = pack_write_batch(self.nc, self.mem_bytes >> 3,
+                                  regs, csrs, words)
+        if packed is not None:
+            self.st = _cpu.apply_write_batch(self.st, *packed)
 
     # -- memory ---------------------------------------------------------------
     def mem_read_word(self, pa):
-        return int(np.asarray(self.st.mem[pa >> 3]))
+        return self.fetch_batch(words=[pa])[2][0]
 
     def mem_write_word(self, pa, v):
         self.st = self.st._replace(

@@ -201,7 +201,10 @@ def run_gang(fleet, rg: RunningGang) -> GangReport:
                 # host-side clock alignment, the migrate() idiom: the
                 # tick counter is the model's clock, so the fabric wait
                 # becomes modelled stall time without wire traffic
-                h.runtime.session.t.csr_write(0, "ticks", floor)
+                # (a CsrW("ticks") is the write stage's eager special
+                # case — one bounded write per member, never batched)
+                h.runtime.session.t.csr_write(
+                    0, "ticks", floor)  # analysis: allow-host-sync
                 wait_ticks += floor - now
                 round_wait += floor - now
         horizon = max(horizon, max(arrival.values(), default=horizon))

@@ -343,9 +343,10 @@ class FaseRuntime:
             self.target.clear_pending(cpu)
             self.target.park(cpu)
             return
-        # controller-internal peek for the HFutex fast path (§V-B)
-        cause = self.target.csr_read(cpu, "mcause")
-        epc = self.target.csr_read(cpu, "mepc")
+        # controller-internal peek for the HFutex fast path (§V-B):
+        # both CSRs in one batched device sync, not two round trips
+        _, (cause, epc), _ = self.target.fetch_batch(
+            csrs=[(cpu, "mcause"), (cpu, "mepc")])
         done = self.session.try_hfutex_fast_path(cpu, cause, epc, now)
         if done is not None:
             self.stats["hfutex_hits"] += 1
@@ -438,6 +439,43 @@ class FaseRuntime:
             for cpu in self.target.pending_cores():
                 self._handle_exception(cpu, now)
         return self.finish()
+
+    # ---------------- fleet-synchronous stepping -------------------------
+    def chunk_begin(self) -> bool | None:
+        """Host phase before a fleet global chunk — one iteration of the
+        :meth:`run_slice` loop minus the device advance, so a fleet
+        driver can batch N devices' advances into a single dispatch
+        (:meth:`repro.core.fleet.FleetRuntime.run_synchronous`).  Polls
+        async I/O and dispatches ready threads; returns True when the
+        device wants cycles this chunk, False when the host side must
+        idle (async I/O still draining), None when every thread has
+        exited (the caller owns the :meth:`finish`)."""
+        if self.sched.live_threads() == 0:
+            return None
+        self.async_io.poll()
+        now = self.target.get_ticks()  # analysis: allow-host-sync
+        self._dispatch_ready(now)
+        if self.sched.running:
+            return True
+        if self.async_io.busy or any(th.state == "ready"
+                                     for th in self.sched.threads.values()):
+            return False
+        raise Deadlock(
+            f"no runnable threads; futex queues: "
+            f"{ {k: list(v) for k, v in self.sched.futex_q.items()} }")
+
+    def chunk_end(self) -> None:
+        """Host phase after a fleet global chunk: pump telemetry and
+        handle every exception the chunk raised, restoring the same
+        loop-boundary invariant :meth:`run_slice` keeps (all raised
+        exceptions handled, no half-applied host work)."""
+        now = self.target.get_ticks()  # analysis: allow-host-sync
+        if self.traffic_hook is not None:
+            self.traffic_hook(now)
+        if self.telemetry is not None:
+            self.telemetry.pump(now)
+        for cpu in self.target.pending_cores():
+            self._handle_exception(cpu, now)
 
     # ---------------- live migration -------------------------------------
     def retarget(self, session) -> None:

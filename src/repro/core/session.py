@@ -55,6 +55,35 @@ from .hfutex import HFutexCache
 #: sentinel distinguishing "not prefetched" from a prefetched 0/None
 _MISS = object()
 
+_MASK64 = (1 << 64) - 1
+
+
+class _WriteStage:
+    """Host-side staging area for one transaction's writes (the write
+    half of ROADMAP item 1, mirroring :meth:`HtpSession._prefetch_reads`
+    on the read side): RegW/CsrW/MemW and full-page writes accumulate in
+    dicts and commit as ONE ``Target.commit_batch`` device update at the
+    end of the ``submit`` that created the stage.
+
+    Dict keying does the intra-transaction dirty tracking: a later write
+    to the same location overwrites in place (program-order last-wins)
+    and guarantees the commit scatter sees unique indices.  Reads that
+    fall back past the prefetch batch consult the stage first, so a
+    read→write→read of one location inside a transaction observes the
+    staged value, never the stale device copy.  Values are 64-bit-masked
+    at stage time; ``x0`` and the global ``ticks`` scalar are never
+    staged (both keep their eager per-element semantics)."""
+
+    __slots__ = ("regs", "csrs", "words")
+
+    def __init__(self):
+        self.regs: dict = {}      # (cpu, idx)  -> value
+        self.csrs: dict = {}      # (cpu, name) -> value
+        self.words: dict = {}     # word index  -> value
+
+    def __bool__(self):
+        return bool(self.regs or self.csrs or self.words)
+
 
 @dataclass(frozen=True)
 class HtpRequest:
@@ -247,6 +276,10 @@ class HtpSession:
         # to this submit without double-recording.
         self.trace = None
         self._trace_suspend = False
+        # write stage of the submit in flight (None outside one); see
+        # _WriteStage — direct accessor calls between transactions (the
+        # hfutex fast path, fleet migration) never see a live stage
+        self._stage: _WriteStage | None = None
 
     # ------------------------------------------------------------------
     def submit(self, txn: HtpTransaction, at: int, stream=0,
@@ -269,31 +302,37 @@ class HtpSession:
         cum_bytes = 0
         cum_cycles = 0
         reads = self._prefetch_reads(txn)
+        self._stage_begin(txn)
         result = TransactionResult(done=ready)
-        for i, req in enumerate(txn.requests):
-            nbytes = req.wire_bytes(self.direct_mode)
-            ch.account(nbytes, f"htp:{req.op}")
-            if req.category:
-                ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
-            self.stats.count(req.op, req.virtual)
-            self.stats.controller_cycles += req.ctrl_cycles
-            cum_bytes += nbytes
-            if not enabled:
-                done = ready
-            elif self.ctrl_serialize:
-                # per-hart controller slice: the request executes when its
-                # byte prefix has arrived AND the hart's controller is
-                # free — transactions on one hart never overlap their
-                # controller cycles (the async engine's discipline).
-                arrive = start + ch.ticks_for_bytes(cum_bytes)
-                done = max(arrive, self._ctrl_free.get(req.cpu, 0)) \
-                    + req.ctrl_cycles
-                self._ctrl_free[req.cpu] = done
-            else:
-                cum_cycles += req.ctrl_cycles
-                done = start + ch.ticks_for_bytes(cum_bytes) + cum_cycles
-            result.ticks.append(done)
-            result.values.append(self._apply(req, done, reads, i))
+        try:
+            for i, req in enumerate(txn.requests):
+                nbytes = req.wire_bytes(self.direct_mode)
+                ch.account(nbytes, f"htp:{req.op}")
+                if req.category:
+                    ch.bytes_by_cat[f"sys:{req.category}"] += nbytes
+                self.stats.count(req.op, req.virtual)
+                self.stats.controller_cycles += req.ctrl_cycles
+                cum_bytes += nbytes
+                if not enabled:
+                    done = ready
+                elif self.ctrl_serialize:
+                    # per-hart controller slice: the request executes when
+                    # its byte prefix has arrived AND the hart's controller
+                    # is free — transactions on one hart never overlap
+                    # their controller cycles (the async engine's
+                    # discipline).
+                    arrive = start + ch.ticks_for_bytes(cum_bytes)
+                    done = max(arrive, self._ctrl_free.get(req.cpu, 0)) \
+                        + req.ctrl_cycles
+                    self._ctrl_free[req.cpu] = done
+                else:
+                    cum_cycles += req.ctrl_cycles
+                    done = start + ch.ticks_for_bytes(cum_bytes) \
+                        + cum_cycles
+                result.ticks.append(done)
+                result.values.append(self._apply(req, done, reads, i))
+        finally:
+            self._stage_end()
         ch.end(start, cum_bytes)
         if enabled:
             wire_done = start + ch.ticks_for_bytes(cum_bytes)
@@ -398,30 +437,84 @@ class HtpSession:
         return [t.mem_read_word(pa) for pa in pas]
 
     # ------------------------------------------------------------------
+    # Staged write batching (ROADMAP item 1, write side): see _WriteStage
+    # ------------------------------------------------------------------
+    #: ops whose effects the stage can defer into one commit_batch
+    _STAGEABLE = frozenset({"RegW", "CsrW", "MemW",
+                            "PageW", "PageS", "NicRx"})
+
+    def _stage_begin(self, txn: HtpTransaction) -> None:
+        """Open a write stage for one ``submit`` if the target has the
+        batched-commit surface and ``txn`` stages anything at all."""
+        t = self.t
+        if t is None or not hasattr(t, "commit_batch"):
+            return
+        if any(r.op in self._STAGEABLE and not r.virtual
+               for r in txn.requests):
+            self._stage = _WriteStage()
+
+    def _stage_flush(self) -> None:
+        """Commit everything staged so far in ONE device update, keeping
+        the stage open.  Called mid-transaction before any request that
+        reads device state wholesale (PageR/PageCP/PageH/NicTx, Tick,
+        counter/trace drains) and at transaction end."""
+        s = self._stage
+        if s:
+            self.t.commit_batch(
+                regs=[(c, i, v) for (c, i), v in s.regs.items()],
+                csrs=[(c, n, v) for (c, n), v in s.csrs.items()],
+                words=list(s.words.items()))
+            s.regs.clear()
+            s.csrs.clear()
+            s.words.clear()
+
+    def _stage_end(self) -> None:
+        try:
+            self._stage_flush()
+        finally:
+            self._stage = None
+
+    # ------------------------------------------------------------------
     def _apply(self, req: HtpRequest, done: int, reads: dict | None = None,
                idx: int = 0):
         """Apply one request's documented effect; returns its response.
         ``reads`` is the transaction's prefetched read batch, keyed by
         request index (:meth:`_prefetch_reads`); reads missing from it
         (their location written earlier in the same transaction) fall
-        back to direct accessors."""
+        back to the write stage, then to direct accessors.  When a stage
+        is open (:meth:`_stage_begin`), RegW/CsrW/MemW and full-page
+        writes stage instead of dispatching; requests that overwrite the
+        same locations eagerly (Redirect, Next's clear-pending, SetMMU)
+        pop the dead staged keys so program order survives the deferred
+        commit, and requests that read device state wholesale flush the
+        stage first."""
         if req.virtual:
             return None           # serving analogue: wire/ctrl time only
         t = self.t
+        s = self._stage
         op, cpu, a = req.op, req.cpu, req.args
         if op == "Redirect":
+            if s is not None:     # redirect overwrites these eagerly
+                for f in self._REDIRECT_WRITES:
+                    s.csrs.pop((cpu, f), None)
             t.redirect(cpu, a[0], resume_tick=done)
         elif op == "Next":
             vals = []
             for name in self._NEXT_READS:
                 v = _MISS if reads is None else \
                     reads.get((idx, name), _MISS)
+                if v is _MISS and s is not None:
+                    v = s.csrs.get((cpu, name), _MISS)
                 if v is _MISS:    # dirtied earlier in this transaction
                     v = t.csr_read(cpu, name)  # analysis: allow-host-sync
                 vals.append(v)
+            if s is not None:     # clear_pending overwrites it eagerly
+                s.csrs.pop((cpu, "pending"), None)
             t.clear_pending(cpu)
             return tuple(vals)
         elif op == "SetMMU":
+            if s is not None:     # set_satp overwrites it eagerly
+                s.csrs.pop((cpu, "satp"), None)
             t.set_satp(cpu, a[0])
         elif op == "FlushTLB":
             t.sfence(cpu)
@@ -432,52 +525,99 @@ class HtpSession:
                 v = reads.get(idx, _MISS)
                 if v is not _MISS:
                     return v
+            if s is not None:
+                v = s.regs.get((cpu, a[0]), _MISS)
+                if v is not _MISS:
+                    return v
             return t.reg_read(cpu, a[0])
         elif op == "RegW":
-            t.reg_write(cpu, a[0], a[1])
+            if s is not None:
+                if a[0] != 0:     # x0 is a no-op on every backend
+                    s.regs[(cpu, a[0])] = a[1] & _MASK64
+            else:
+                t.reg_write(cpu, a[0], a[1])
         elif op == "CsrR":
             if reads is not None:
                 v = reads.get(idx, _MISS)
                 if v is not _MISS:
                     return v
+            if s is not None:
+                v = s.csrs.get((cpu, a[0]), _MISS)
+                if v is not _MISS:
+                    return v
             return t.csr_read(cpu, a[0])
         elif op == "CsrW":
-            t.csr_write(cpu, a[0], a[1])
+            if s is not None and a[0] != "ticks":
+                # the global clock scalar keeps eager semantics
+                s.csrs[(cpu, a[0])] = int(a[1]) & _MASK64
+            else:
+                t.csr_write(cpu, a[0], a[1])
         elif op == "MemR":
             if reads is not None:
                 v = reads.get(idx, _MISS)
                 if v is not _MISS:
                     return v
+            if s is not None:
+                v = s.words.get(a[0] >> 3, _MISS)
+                if v is not _MISS:
+                    return v
             return t.mem_read_word(a[0])
         elif op == "MemW":
-            t.mem_write_word(a[0], a[1])
+            if s is not None:
+                s.words[a[0] >> 3] = a[1] & _MASK64
+            else:
+                t.mem_write_word(a[0], a[1])
         elif op == "PageS":
-            t.page_set(a[0], a[1])
+            if s is not None:
+                base = (a[0] << 12) >> 3
+                v = a[1] & _MASK64
+                for j in range(512):
+                    s.words[base + j] = v
+            else:
+                t.page_set(a[0], a[1])
         elif op == "PageCP":
+            self._stage_flush()   # the copy reads the src page wholesale
             t.page_copy(a[0], a[1])
         elif op == "PageR":
+            self._stage_flush()
             return t.page_read(a[0])
         elif op == "PageW":
-            t.page_write(a[0], a[1])
+            if s is not None:
+                base = (a[0] << 12) >> 3
+                for j, v in enumerate(a[1]):
+                    s.words[base + j] = int(v) & _MASK64
+            else:
+                t.page_write(a[0], a[1])
         elif op == "PageH":
+            self._stage_flush()
             return htp.page_hash(t.page_read(a[0]))
         elif op == "Tick":
+            self._stage_flush()
             return t.get_ticks()
         elif op == "UTick":
+            self._stage_flush()
             return t.get_uticks(cpu)
         elif op == "CtrSample":
             # one bundled device fetch for the whole counter frame
+            self._stage_flush()
             return tuple(t.fetch_batch(
                 csrs=[(cpu, n) for n in htp.TELEM_COUNTERS])[1])
         elif op == "TraceB":
             # drain the hart's commit-trace ring (records, ring_dropped);
             # the telemetry bridge normally drains host-side and ships
             # the frames pre-filled — this path serves direct submission
+            self._stage_flush()
             return t.trace_drain(cpu)
         elif op == "NicTx":
+            self._stage_flush()
             return t.page_read(a[0])      # page words into the egress FIFO
         elif op == "NicRx":
-            t.page_write(a[0], a[1])
+            if s is not None:
+                base = (a[0] << 12) >> 3
+                for j, v in enumerate(a[1]):
+                    s.words[base + j] = int(v) & _MASK64
+            else:
+                t.page_write(a[0], a[1])
         elif op == "NicCtl":
             pass   # doorbell only: effects ride as HFutex/FlushTLB rows
         else:

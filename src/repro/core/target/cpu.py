@@ -96,9 +96,14 @@ class CpuState(NamedTuple):
     stall_ticks: jax.Array   # (nc,) u64 — ticks spent active-but-stalled
     fetch_hits: jax.Array    # (nc,) u64 — fetch-block cache hits (model)
     fetch_walks: jax.Array   # (nc,) u64 — fetch-block fills/walks (model)
-    tlb_walks: jax.Array     # (nc,) u64 — data-TLB walks (PySim model
-    #                          counter: this backend walks every access,
-    #                          so it stays 0 here by definition)
+    tlb_walks: jax.Array     # (nc,) u64 — data-TLB walks (model counter:
+    #                          the fast path counts misses of its chunk-
+    #                          local data cache when ``dtlb_ways > 0``;
+    #                          the scalar loop walks every access and
+    #                          keeps it 0.  PySim counts its own cache's
+    #                          misses — the counter-identity contract in
+    #                          tests/test_telemetry.py explicitly allows
+    #                          the backends to differ here)
     tracebuf: jax.Array      # (nc, slots, 4) u64 — commit-trace ring:
     #                          (tick, pc, inst, priv) per retirement
     trace_n: jax.Array       # (nc,) u64 — records ever produced (the
@@ -518,10 +523,36 @@ def _empty_blocks(nc: int, block_words: int) -> FetchBlocks:
     return FetchBlocks(z, z, z, jnp.zeros((nc, block_words), jnp.uint32))
 
 
-def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
-                  budget_left, nc: int, mask, block_words: int,
-                  block_cache: bool, walk_fetch, trace_on: bool = False,
-                  trigger: tuple | None = None):
+class DTlb(NamedTuple):
+    """Chunk-local per-lane data-translation cache — the load/store twin
+    of :class:`FetchBlocks`.  Direct-mapped on ``vpn & (ways - 1)``, one
+    row per lane, 4 KiB (level-0) leaves only, exactly like PySim's TLB.
+    Strictly chunk-local (rebuilt empty every :func:`run_chunk_fast`
+    call), so host-driven PTE writes and sfence between chunks can never
+    serve stale, and there is no satp tag: the guest ISA carries no CSR
+    writes, so a lane's ``satp`` cannot change inside a chunk.  Within a
+    chunk a committed store over a cached entry's backing leaf PTE kills
+    the entry (``ptw`` match) — the same SMC-exact store-overlap rule the
+    fetch blocks apply, sitting inside the delayed-shootdown envelope
+    documented on :class:`FetchBlocks`."""
+
+    vpn: jax.Array     # (L, ways) u64 — tag; _NO_WORD = empty way
+    ppn: jax.Array     # (L, ways) u64 — post-mask physical page number
+    perms: jax.Array   # (L, ways) u64 — leaf PTE permission byte
+    ptw: jax.Array     # (L, ways) u64 — word index of the backing PTE
+
+
+def _empty_dtlb(lanes: int, ways: int) -> DTlb:
+    z = jnp.zeros((lanes, ways), U64)
+    return DTlb(jnp.full((lanes, ways), _u(_NO_WORD)), z, z, z)
+
+
+def _exec_substep(st: CpuState, fb: FetchBlocks, dtlb: DTlb, exec_from,
+                  gate, budget_left, nc: int, mask, block_words: int,
+                  block_cache: bool, walk_fetch, dtlb_ways: int = 0,
+                  trace_on: bool = False,
+                  trigger: tuple | None = None,
+                  n_devices: int = 1, mem_words: int = 0):
     """One fast-path substep: a whole global tick in the common case.
 
     Mirrors :func:`_exec_one` lane-wise from the pre-substep state, then
@@ -542,26 +573,43 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     ``gate`` is the scalar "a new tick may start" predicate from the
     batched-issue unroll; a partially-executed tick always finishes
     regardless (matching PySim, where a trap raised mid-tick never stops
-    the later cores of that same tick).  Returns
-    ``(st, fb, exec_from', dcycles)``.
+    the later cores of that same tick).  ``dtlb`` (used when
+    ``dtlb_ways > 0``) carries the chunk-local data-translation cache at
+    ``L`` lanes.  Returns ``(st, fb, dtlb, exec_from', dcycles)``.
 
-    All lane math runs at ``L = max(nc, 2)`` lanes with any pad lane
+    All lane math runs at ``L = max(lanes, 2)`` lanes with any pad lane
     permanently parked: XLA rewrites single-element gathers/scatters on
     the memory image into dynamic-slice forms that later fuse into
     unrelated consumers, which defeats in-place buffer assignment inside
     the while loop and re-introduces the full-memory copy per tick this
     interpreter exists to avoid.  Two lanes keep them real gather/scatter
     ops, which stay materialized and alias in place.
+
+    ``n_devices > 1`` is the flat-fleet form (``run_chunk_fleet``): the
+    state carries ``D * nc`` lanes keyed (device, core), ``st.mem`` is
+    every device's image concatenated (``mem_words`` u64 words each,
+    lanes offset into their own partition), ``st.ticks`` /
+    ``exec_from`` / ``gate`` / ``budget_left`` are per-device ``(D,)``
+    vectors, and every cross-lane interaction (conflict ordering, store
+    invalidation, cache kills) is masked to same-device pairs — devices
+    are shared-nothing by construction, so each advances bit-exactly as
+    it would alone while sharing one compiled substep.
     """
+    D = n_devices
+    # the fleet form is keyed off mem_words, not D: run_chunk_fleet with
+    # a single device still carries (1,)-vector clocks/budgets/gates and
+    # a (D*W,)-flat memory, so it must take the vectorized paths below
+    fleet = mem_words > 0
+    total = D * nc
     mem = st.mem
-    L = max(nc, 2)
-    if L == nc:
+    L = max(total, 2)
+    if L == total:
         pc, priv, pend, stall, satp, res = (st.pc, st.priv, st.pending,
                                             st.stall_until, st.satp, st.res)
         regs = st.regs
     else:
         def _pad(v, fill=0):
-            tail = jnp.full((L - nc,) + v.shape[1:], fill, v.dtype)
+            tail = jnp.full((L - total,) + v.shape[1:], fill, v.dtype)
             return jnp.concatenate([v, tail])
         pc = _pad(st.pc)
         priv = _pad(st.priv, 3)
@@ -574,10 +622,26 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
                          _pad(fb.insts))
     lanes = jnp.arange(L)
     active = priv != 3
-    runnable = active & ~pend & (st.ticks >= stall)
-    cont = exec_from > _u(0)
-    ok = cont | gate
-    cand = ok & runnable & (lanes.astype(U64) >= exec_from)
+    if not fleet:
+        dev = None
+        base = None
+        same_dev = None
+        ticks_lane = st.ticks              # scalar, broadcasts per lane
+        cont = exec_from > _u(0)
+        runnable = active & ~pend & (ticks_lane >= stall)
+        cand = (cont | gate) & runnable & (lanes.astype(U64) >= exec_from)
+    else:
+        # flat fleet: per-device scalars become (D,) vectors, gathered
+        # per lane; the pad lane (only when D*nc == 1) maps onto the
+        # last device but is permanently parked, so it never acts
+        dev = jnp.minimum(lanes // nc, D - 1)
+        base = dev.astype(U64) * _u(mem_words)
+        same_dev = dev[:, None] == dev[None, :]
+        ticks_lane = st.ticks[dev]
+        cont = exec_from > _u(0)                         # (D,)
+        lane_loc = (lanes - dev * nc).astype(U64)
+        runnable = active & ~pend & (ticks_lane >= stall)
+        cand = (cont | gate)[dev] & runnable & (lane_loc >= exec_from[dev])
 
     # ---- fetch: block cache hit / walk+fill on miss --------------------
     if block_cache:
@@ -589,7 +653,7 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     miss = cand & ~hit
 
     def do_walk(_):
-        return walk_fetch(mem, satp, pc)
+        return walk_fetch(mem, satp, pc, base)
 
     def no_walk(_):
         return (jnp.zeros((L,), U64), jnp.zeros((L,), bool),
@@ -675,14 +739,57 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
                     a + jnp.where(is_store, imm_s, imm_i))
     is_memop = is_load | is_store | is_amo
     want_w = is_store | (is_amo & ~is_lr)
-    dpa, dfault, dwords = pw_ops.sv39_walk(
-        mem, satp, dva, want_w, jnp.zeros((L,), bool), mask)
+    if dtlb_ways:
+        # ---- data-TLB lookup: the load/store twin of the fetch-block
+        # cache.  A hit replays the cached 4 KiB leaf translation
+        # (post-mask ppn) and re-checks the cached permission byte for
+        # THIS access (a load-filled entry must still refuse a store on
+        # an R-only page — that falls through to a real walk, which
+        # faults exactly like the uncached path).  Only true misses
+        # walk, and only their PTE words enter the same-tick conflict
+        # read set: a hit lane's input is the cached entry, which
+        # store-overlap invalidation below keeps coherent.
+        bare = (satp >> _u(60)) != _u(8)
+        vpn = dva >> _u(12)
+        way = (vpn & _u(dtlb_ways - 1)).astype(jnp.int32)[:, None]
+        tag = jnp.take_along_axis(dtlb.vpn, way, axis=1)[:, 0]
+        tppn = jnp.take_along_axis(dtlb.ppn, way, axis=1)[:, 0]
+        tperm = jnp.take_along_axis(dtlb.perms, way, axis=1)[:, 0]
+        dneed = _u(isa.PTE_U) | jnp.where(want_w, _u(isa.PTE_W),
+                                          _u(isa.PTE_R))
+        dhit = cand & is_memop & ~bare & (tag == vpn) & \
+            ((tperm & dneed) == dneed)
+        dwalk = cand & is_memop & ~bare & ~dhit
+
+        def do_dwalk(_):
+            return pw_ref.sv39_walk_leaf(mem, satp, dva, want_w,
+                                         jnp.zeros((L,), bool), mask, base)
+
+        def no_dwalk(_):
+            z = jnp.zeros((L,), U64)
+            return (z, jnp.zeros((L,), bool),
+                    jnp.full((L, 3), _u(_NO_WORD)), z,
+                    jnp.zeros((L,), bool), jnp.full((L,), _u(_NO_WORD)))
+
+        wdpa, wdfault, dwords, wperms, wleaf0, wptw = lax.cond(
+            jnp.any(dwalk), do_dwalk, no_dwalk, None)
+        dpa = jnp.where(dhit, ((tppn << _u(12)) | (dva & _u(0xFFF))) & mask,
+                        jnp.where(bare, dva & mask, wdpa))
+        dfault = dwalk & wdfault
+    else:
+        dwalk = cand & is_memop
+        if not fleet:
+            dpa, dfault, dwords = pw_ops.sv39_walk(
+                mem, satp, dva, want_w, jnp.zeros((L,), bool), mask)
+        else:
+            dpa, dfault, dwords = pw_ref.sv39_walk_ref(
+                mem, satp, dva, want_w, jnp.zeros((L,), bool), mask, base)
     szb = jnp.where(is_amo,
                     jnp.where(f3 == _u(2), _u(4), _u(8)),
                     _u(1) << (f3 & _u(3)))
     misal = is_memop & ((dva & (szb - _u(1))) != 0)
 
-    dword = mem[dpa >> _u(3)]
+    dword = mem[(dpa >> _u(3)) if base is None else base + (dpa >> _u(3))]
     dshift = (dpa & _u(7)) << _u(3)
     raw = dword >> dshift
     sizemask = jnp.select([szb == _u(1), szb == _u(2), szb == _u(4)],
@@ -753,17 +860,33 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         jnp.where(cand, ipa >> _u(3), no_w)[:, None],
         jnp.where(cand & is_memop, stw, no_w)[:, None],
         jnp.where(miss[:, None], wwords, no_w),
-        jnp.where((cand & is_memop)[:, None], dwords, no_w),
+        jnp.where(dwalk[:, None], dwords, no_w),
     ], axis=1)                                             # (L, 8)
     res_word = jnp.where(cand & (res != _u(_RES_INVALID)),
                          res >> _u(3), no_w)
     earlier = lanes[:, None] < lanes[None, :]              # i executes first
+    if D > 1:
+        # devices are shared-nothing: only same-device pairs can ever
+        # order or conflict (word indices are device-local, so a raw
+        # cross-device compare could alias)
+        earlier = earlier & same_dev
     wr = commit[:, None] & earlier                         # (i, j)
     read_hit = jnp.any(stw[:, None, None] == reads[None, :, :], axis=-1)
     st_hit = commit[None, :] & (stw[:, None] == stw[None, :])
     res_hit = stw[:, None] == res_word[None, :]
     conf = jnp.any(wr & (read_hit | st_hit | res_hit), axis=0)   # per j
-    safe = cand & (jnp.cumsum(conf.astype(jnp.int32)) == 0)
+    if not fleet:
+        safe = cand & (jnp.cumsum(conf.astype(jnp.int32)) == 0)
+    else:
+        # conflict prefix is per device: a conflict in one device must
+        # never defer another device's lanes
+        csum = jnp.cumsum(conf[:total].reshape(D, nc).astype(jnp.int32),
+                          axis=1).reshape(total)
+        ok_pfx = csum == 0
+        if L != total:
+            ok_pfx = jnp.concatenate(
+                [ok_pfx, jnp.zeros((L - total,), bool)])
+        safe = cand & ok_pfx
     deferred = cand & ~safe
 
     tr = safe & traps
@@ -774,7 +897,8 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     sval = jnp.where(is_store | is_sc, b, amo_new)
     wmask = sizemask << dshift
     new_word = (dword & ~wmask) | ((sval << dshift) & wmask)
-    widx = jnp.where(commit, stw, _u(mem.shape[0]))        # OOB -> dropped
+    stw_g = stw if base is None else base + stw
+    widx = jnp.where(commit, stw_g, _u(mem.shape[0]))      # OOB -> dropped
     new_mem = mem.at[widx].set(new_word, mode="drop")
 
     # ---- reservations ---------------------------------------------------
@@ -786,7 +910,10 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     # ``res_word`` above).
     own = jnp.where(ret & is_lr, dpa,
                     jnp.where(ret & is_sc, _u(_RES_INVALID), res))
-    inv = jnp.any(commit[:, None] & (lanes[:, None] != lanes[None, :]) &
+    other = lanes[:, None] != lanes[None, :]
+    if D > 1:
+        other = other & same_dev
+    inv = jnp.any(commit[:, None] & other &
                   (stw[:, None] == (own >> _u(3))[None, :]), axis=0)
     new_res = jnp.where(inv, _u(_RES_INVALID), own)
 
@@ -820,25 +947,66 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         stb = stw << _u(3)
         over = (commit[:, None] & (stb[:, None] + _u(8) > fb.pbase[None, :])
                 & (stb[:, None] < (fb.pbase + fb.nbytes)[None, :]))
+        if D > 1:
+            over = over & same_dev
         fb = fb._replace(nbytes=jnp.where(jnp.any(over, axis=0), _u(0),
                                           fb.nbytes))
+
+    if dtlb_ways:
+        # fill: applied (safe) walk lanes that reached a 4 KiB leaf cache
+        # it in their own row; deferred lanes re-walk next substep and
+        # fill then, so a fill never captures a pre-conflict translation
+        dfill = dwalk & safe & ~dfault & wleaf0
+        wcols = jnp.arange(dtlb_ways)[None, :] == way      # (L, ways)
+        put = dfill[:, None] & wcols
+        dtlb = DTlb(
+            vpn=jnp.where(put, vpn[:, None], dtlb.vpn),
+            ppn=jnp.where(put, (wdpa >> _u(12))[:, None], dtlb.ppn),
+            perms=jnp.where(put, wperms[:, None], dtlb.perms),
+            ptw=jnp.where(put, wptw[:, None], dtlb.ptw))
+        # store-overlap: a committed store onto any entry's backing leaf
+        # PTE word (including one filled this very tick) kills the entry
+        phit = stw[:, None, None] == dtlb.ptw[None, :, :]
+        if D > 1:
+            phit = phit & same_dev[:, :, None]
+        pinv = jnp.any(commit[:, None, None] & phit, axis=0)
+        dtlb = dtlb._replace(vpn=jnp.where(pinv, _u(_NO_WORD), dtlb.vpn))
 
     # ---- tick bookkeeping ----------------------------------------------
     # The tick completes when no candidate lane was deferred; a fresh
     # tick whose every live lane is stalled fast-forwards the clock to
     # the next wake-up instead (the reference loop's skip arm).
-    started = jnp.any(cand) | cont
-    tick_done = started & ~jnp.any(deferred)
-    skip = gate & ~cont & ~jnp.any(runnable) & jnp.any(active)
-    gaps = jnp.where(active, stall - st.ticks, _u(_RES_INVALID))
-    gap = jnp.minimum(jnp.min(gaps), budget_left)
-    dticks = jnp.where(tick_done, _u(1), jnp.where(skip, gap, _u(0)))
-    new_from = jnp.where(jnp.any(deferred),
-                         jnp.argmax(deferred).astype(U64), _u(0))
+    if not fleet:
+        started = jnp.any(cand) | cont
+        tick_done = started & ~jnp.any(deferred)
+        skip = gate & ~cont & ~jnp.any(runnable) & jnp.any(active)
+        gaps = jnp.where(active, stall - st.ticks, _u(_RES_INVALID))
+        gap = jnp.minimum(jnp.min(gaps), budget_left)
+        dticks = jnp.where(tick_done, _u(1), jnp.where(skip, gap, _u(0)))
+        new_from = jnp.where(jnp.any(deferred),
+                             jnp.argmax(deferred).astype(U64), _u(0))
+        dticks_lane = dticks
+    else:
+        # every reduction above becomes a segmented per-device one; each
+        # device keeps its own clock, skip arm and deferred-lane resume
+        def dany(v):
+            return jnp.any(v[:total].reshape(D, nc), axis=1)
+        started = dany(cand) | cont
+        tick_done = started & ~dany(deferred)
+        skip = gate & ~cont & ~dany(runnable) & dany(active)
+        gaps = jnp.where(active, stall - ticks_lane, _u(_RES_INVALID))
+        gap = jnp.minimum(jnp.min(gaps[:total].reshape(D, nc), axis=1),
+                          budget_left)
+        dticks = jnp.where(tick_done, _u(1), jnp.where(skip, gap, _u(0)))
+        new_from = jnp.where(
+            dany(deferred),
+            jnp.argmax(deferred[:total].reshape(D, nc),
+                       axis=1).astype(U64), _u(0))
+        dticks_lane = dticks[dev]
     retired = ret.astype(U64)
 
     def cut(v):
-        return v if L == nc else v[:nc]
+        return v if L == total else v[:total]
 
     # ---- telemetry counters (repro.telemetry; pure accounting) ---------
     # Stall accrual mirrors the reference loop exactly: on a completed
@@ -846,10 +1014,12 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
     # every active core accrues the fast-forward gap (the gap is the
     # minimum remaining stall, so it never overshoots any lane); a
     # deferred substep (dticks = 0) accrues nothing.
-    stalled = cut(active & (stall > st.ticks))
-    dstall = jnp.where(stalled,
-                       jnp.minimum(cut(stall) - st.ticks, dticks), _u(0))
+    stalled = cut(active & (stall > ticks_lane))
+    tl = ticks_lane if not fleet else cut(ticks_lane)   # scalar vs (total,)
+    dtl = dticks_lane if not fleet else cut(dticks_lane)
+    dstall = jnp.where(stalled, jnp.minimum(cut(stall) - tl, dtl), _u(0))
     if trace_on:
+        assert not fleet, "commit-trace capture is single-device only"
         # Commit-trace ring: one (tick, pc, inst, priv) record per
         # retirement at trace_n % slots; non-retiring lanes scatter to
         # an out-of-range row and drop.  The host derives overflow drops
@@ -904,23 +1074,24 @@ def _exec_substep(st: CpuState, fb: FetchBlocks, exec_from, gate,
         stall_ticks=st.stall_ticks + dstall,
         fetch_hits=st.fetch_hits + cut((hit & safe).astype(U64)),
         fetch_walks=st.fetch_walks + cut((miss & safe).astype(U64)),
+        tlb_walks=(st.tlb_walks + cut((dwalk & safe).astype(U64))
+                   if dtlb_ways else st.tlb_walks),
         tracebuf=new_tracebuf,
         trace_n=new_trace_n,
         trace_armed=new_trace_armed,
     )
-    if L != nc:
-        fb = FetchBlocks(fb.vbase[:nc], fb.pbase[:nc], fb.nbytes[:nc],
-                         fb.insts[:nc])
-    return st, fb, new_from, dticks
+    if L != total:
+        fb = FetchBlocks(fb.vbase[:total], fb.pbase[:total],
+                         fb.nbytes[:total], fb.insts[:total])
+    return st, fb, dtlb, new_from, dticks
 
 
-@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7, 8, 9),
-         donate_argnums=(0,))
-def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
-                   issue_width: int = 8, block_words: int = 16,
-                   block_cache: bool = True, fetch_kernel: str = "ref",
-                   trace_on: bool = False,
-                   trigger: tuple | None = None) -> CpuState:
+def _run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
+                    issue_width: int = 8, block_words: int = 16,
+                    block_cache: bool = True, fetch_kernel: str = "ref",
+                    trace_on: bool = False,
+                    trigger: tuple | None = None,
+                    dtlb_ways: int = 8) -> CpuState:
     """Fast-path twin of :func:`run_chunk`: identical architectural
     semantics, up to ``issue_width`` vectorized ticks per loop iteration.
 
@@ -933,8 +1104,16 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
     spec from :mod:`repro.telemetry.triggers`) windows commit-trace
     capture; it only affects which records enter the ring — never the
     architectural step — and ``None`` compiles the gate out.
+    ``dtlb_ways`` (a power of two; 0 disables) sizes the chunk-local
+    per-lane data-translation cache (:class:`DTlb`) so straight-line
+    loads/stores skip the Sv39 walk the way cached fetches already do.
+
+    This undecorated body is shared by :func:`run_chunk_fast` (jitted,
+    one device) and :func:`run_chunk_fleet` (jitted vmap over stacked
+    per-device states) — keep it free of host-side effects.
     """
     assert block_words & (block_words - 1) == 0, "block_words must be pow2"
+    assert dtlb_ways & (dtlb_ways - 1) == 0, "dtlb_ways must be pow2 or 0"
     assert not trace_on or st.tracebuf.shape[1] > 0, \
         "trace_on needs an armed ring (make_state trace_slots / trace_arm)"
     nc = n_cores
@@ -944,7 +1123,8 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
     if fetch_kernel == "pallas":
         interpret = jax.default_backend() != "tpu"
 
-        def walk_fetch(mem, satp, va):
+        def walk_fetch(mem, satp, va, base=None):
+            assert base is None, "pallas fetch is single-device only"
             return pw_ops.walk_fetch_block(mem, satp, va, mem_bytes - 1,
                                            block_words,
                                            interpret=interpret)
@@ -952,9 +1132,9 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
         # "ref" must be honourable on every backend (the Pallas kernel's
         # u64 image needs an x64 story real TPUs lack), so bypass the
         # backend-dispatching ops layer entirely
-        def walk_fetch(mem, satp, va):
+        def walk_fetch(mem, satp, va, base=None):
             return pw_ref.walk_fetch_block_ref(mem, satp, va, mask,
-                                               block_words)
+                                               block_words, base)
 
     # No lax.cond anywhere near the carry: on XLA:CPU a conditional whose
     # operands include the memory image costs a full copy of it per
@@ -964,18 +1144,19 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
     # core-order suffix is still owed (it must finish even once a trap is
     # pending, exactly like the reference tick).
     def cond(carry):
-        st, cycles, exec_from, fb = carry
+        st, cycles, exec_from, fb, dtlb = carry
         return (((cycles < limit) & ~jnp.any(st.pending) &
                  jnp.any(st.priv != 3)) | (exec_from > _u(0)))
 
     def body(carry):
         def issue(_, carry):
-            st, cycles, exec_from, fb = carry
+            st, cycles, exec_from, fb, dtlb = carry
             gate = ~jnp.any(st.pending) & (cycles < limit)
-            st, fb, exec_from, d = _exec_substep(
-                st, fb, exec_from, gate, limit - cycles, nc, mask,
-                block_words, block_cache, walk_fetch, trace_on, trigger)
-            return st, cycles + d, exec_from, fb
+            st, fb, dtlb, exec_from, d = _exec_substep(
+                st, fb, dtlb, exec_from, gate, limit - cycles, nc, mask,
+                block_words, block_cache, walk_fetch, dtlb_ways,
+                trace_on, trigger)
+            return st, cycles + d, exec_from, fb, dtlb
 
         # fori_loop: the substep traces once, runs issue_width times — a
         # python unroll multiplies compile time by issue_width for no
@@ -983,9 +1164,99 @@ def run_chunk_fast(st: CpuState, n_cores: int, mem_bytes: int, max_cycles,
         # multi-microsecond body)
         return lax.fori_loop(0, issue_width, issue, carry)
 
-    carry = (st, _u(0), _u(0), _empty_blocks(nc, block_words))
-    st, _, _, _ = lax.while_loop(cond, body, carry)
+    carry = (st, _u(0), _u(0), _empty_blocks(nc, block_words),
+             _empty_dtlb(max(nc, 2), max(dtlb_ways, 1)))
+    st, _, _, _, _ = lax.while_loop(cond, body, carry)
     return st
+
+
+run_chunk_fast = partial(jax.jit,
+                         static_argnums=(1, 2, 4, 5, 6, 7, 8, 9, 10),
+                         donate_argnums=(0,))(_run_chunk_fast)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 4, 5, 6, 7, 8, 9),
+         donate_argnums=(0,))
+def run_chunk_fleet(sts: CpuState, n_cores: int, mem_bytes: int, budgets,
+                    issue_width: int = 8, block_words: int = 16,
+                    block_cache: bool = True, fetch_kernel: str = "ref",
+                    dtlb_ways: int = 8, n_devices: int = 1) -> CpuState:
+    """One XLA dispatch for a whole fleet's global chunk (ROADMAP item 1,
+    FireSim-metasim style): ``sts`` is a :class:`CpuState` whose every
+    array carries a leading device axis ``(D, ...)``, advanced as ONE
+    flat machine of ``D * n_cores`` lanes with a per-device cycle budget
+    ``budgets`` ``(D,)``.
+
+    Flat, not vmapped: ``jax.vmap`` over :func:`_run_chunk_fast` is
+    catastrophic on XLA:CPU — a batched ``while_loop`` select-merges the
+    entire carry (memory images included) every iteration, and batched
+    gather/scatter lowers ~9x slower than the flat forms.  Instead the
+    device axis folds into the lane axis: memory images concatenate into
+    one flat buffer (each lane offset into its own device's partition),
+    per-device scalars (clock, budget, deferred-lane resume point)
+    become ``(D,)`` vectors with segmented reductions, and every
+    cross-lane interaction inside :func:`_exec_substep` is masked to
+    same-device pairs — devices stay shared-nothing, so each advances
+    bit-exactly as it would alone while sharing one compiled program.
+
+    A device whose budget is 0 is genuinely untouched: its issue gate is
+    false every substep, so no lane of it is ever a candidate and its
+    clock never moves — which is what lets a single-device ``run`` on a
+    fleet view dispatch the whole stacked program with a one-hot budget
+    vector and still hold every golden tick.  ``trace_on`` is
+    deliberately not plumbed: commit-trace capture stays a
+    single-device affair, and only the ``"ref"`` fetch kernel is
+    supported (the Pallas path has no per-lane base-offset story).
+    """
+    assert n_devices == sts.pc.shape[0]
+    assert block_words & (block_words - 1) == 0, "block_words must be pow2"
+    assert dtlb_ways & (dtlb_ways - 1) == 0, "dtlb_ways must be pow2 or 0"
+    assert fetch_kernel == "ref", "fleet chunks use the ref fetch kernel"
+    D, nc = n_devices, n_cores
+    total = D * nc
+    mask = _u(mem_bytes - 1)
+    mem_words = mem_bytes // 8
+    budgets = jnp.asarray(budgets, U64)
+
+    def flat(x):
+        # fold the device axis into the lane axis ((D, nc, ...) ->
+        # (D*nc, ...), mem (D, W) -> (D*W,)); per-device scalars that
+        # became (D,) vectors (ticks) pass through
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]) \
+            if x.ndim >= 2 else x
+
+    fst = CpuState(*[flat(x) for x in sts])
+
+    def walk_fetch(mem, satp, va, base=None):
+        return pw_ref.walk_fetch_block_ref(mem, satp, va, mask,
+                                           block_words, base)
+
+    def dany(v):
+        return jnp.any(v.reshape(D, nc), axis=1)
+
+    def cond(carry):
+        st, cycles, exec_from, fb, dtlb = carry
+        return jnp.any(((cycles < budgets) & ~dany(st.pending) &
+                        dany(st.priv != 3)) | (exec_from > _u(0)))
+
+    def body(carry):
+        def issue(_, carry):
+            st, cycles, exec_from, fb, dtlb = carry
+            gate = ~dany(st.pending) & (cycles < budgets)
+            st, fb, dtlb, exec_from, d = _exec_substep(
+                st, fb, dtlb, exec_from, gate, budgets - cycles, nc,
+                mask, block_words, block_cache, walk_fetch, dtlb_ways,
+                False, None, n_devices=D, mem_words=mem_words)
+            return st, cycles + d, exec_from, fb, dtlb
+
+        return lax.fori_loop(0, issue_width, issue, carry)
+
+    carry = (fst, jnp.zeros((D,), U64), jnp.zeros((D,), U64),
+             _empty_blocks(total, block_words),
+             _empty_dtlb(max(total, 2), max(dtlb_ways, 1)))
+    fst, _, _, _, _ = lax.while_loop(cond, body, carry)
+    return CpuState(*[y.reshape(jnp.shape(x))
+                      for y, x in zip(fst, sts)])
 
 
 # ---------------------------------------------------------------------------
@@ -1013,3 +1284,112 @@ def page_set_words(mem, word_off, val):
 def page_copy_words(mem, src_off, dst_off):
     page = lax.dynamic_slice(mem, (jnp.asarray(src_off),), (512,))
     return lax.dynamic_update_slice(mem, page, (jnp.asarray(dst_off),))
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def apply_write_batch(st: CpuState, csr_names: tuple,
+                      reg_cpu, reg_idx, reg_val,
+                      word_idx, word_val,
+                      csr_cpus, csr_vals) -> CpuState:
+    """Commit a staged transaction's writes in one donated update — the
+    device half of the session's write batching (ROADMAP item 1).
+
+    Index arrays arrive pow2-padded (so a handful of distinct batch
+    shapes cover every transaction and the jit cache stays small); pad
+    entries carry out-of-bounds indices — ``reg_cpu``/``csr cpu`` = nc,
+    ``word_idx`` = mem_words — and ``mode="drop"`` discards them.  The
+    stage guarantees unique live indices per array (it is dict-keyed),
+    so the scatters have no duplicate-index ordering hazard, and values
+    are pre-masked to 64 bits host-side.
+
+    ``csr_names`` is a static sorted tuple of the CSR names present;
+    ``csr_cpus``/``csr_vals`` are matching tuples of (cpu-index, value)
+    arrays, one pair per name, since each CSR targets a different
+    :class:`CpuState` field with its own dtype story.
+    """
+    regs = st.regs.at[reg_cpu, reg_idx].set(
+        jnp.asarray(reg_val, U64), mode="drop")
+    mem = st.mem.at[word_idx].set(jnp.asarray(word_val, U64), mode="drop")
+    st = st._replace(regs=regs, mem=mem)
+    for name, cc, vv in zip(csr_names, csr_cpus, csr_vals):
+        vv = jnp.asarray(vv, U64)
+        if name == "pending":
+            field = st.pending.at[cc].set(vv != 0, mode="drop")
+        elif name == "priv":
+            field = st.priv.at[cc].set(vv.astype(U32), mode="drop")
+        else:
+            field = getattr(st, name).at[cc].set(vv, mode="drop")
+        st = st._replace(**{name: field})
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Jitted host micro-ops: the few per-exception control writes that stay
+# eager by design (Redirect / Next's clear-pending / park / the ticks
+# clock) are each ONE donated dispatch instead of a handful of
+# un-jitted scatter primitives — the same dispatch-count discipline as
+# the batched read/write paths, for ops too small to batch.
+# ---------------------------------------------------------------------------
+@partial(jax.jit, donate_argnums=(0,))
+def redirect_op(st: CpuState, c, pc, resume) -> CpuState:
+    return st._replace(
+        pc=st.pc.at[c].set(pc),
+        priv=st.priv.at[c].set(U32(0)),
+        pending=st.pending.at[c].set(False),
+        stall_until=st.stall_until.at[c].set(resume))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def park_op(st: CpuState, c) -> CpuState:
+    return st._replace(priv=st.priv.at[c].set(U32(3)),
+                       pending=st.pending.at[c].set(False))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def clear_pending_op(st: CpuState, c) -> CpuState:
+    return st._replace(pending=st.pending.at[c].set(False))
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def csr_write_op(st: CpuState, name: str, c, v) -> CpuState:
+    if name == "ticks":
+        return st._replace(ticks=jnp.asarray(v, U64))
+    if name == "pending":
+        val = jnp.asarray(v, U64) != 0
+    elif name == "priv":
+        val = jnp.asarray(v, U32)
+    else:
+        val = jnp.asarray(v, U64)
+    return st._replace(**{name: getattr(st, name).at[c].set(val)})
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def reg_write_op(st: CpuState, c, idx, v) -> CpuState:
+    return st._replace(regs=st.regs.at[c, idx].set(v))
+
+
+@partial(jax.jit, static_argnums=(1,))
+def fetch_read_batch(st: CpuState, csr_names: tuple,
+                     reg_cpu, reg_idx, word_idx, csr_cpus):
+    """One compiled gather for the host's batched reads — the read-side
+    twin of :func:`apply_write_batch` and the device half of
+    :meth:`~repro.core.interface.JaxTarget.fetch_batch`.
+
+    Index arrays arrive pow2-padded (pad entries index slot 0 — always
+    valid; the host discards the padded tail), so a handful of distinct
+    batch shapes cover every transaction instead of one eager-gather
+    compilation per request mix.  ``csr_names`` is a static sorted tuple
+    of the CSR/core-state fields present; ``csr_cpus`` the matching
+    tuple of cpu-index arrays.  Every CSR value is widened to u64
+    (``pending`` -> 0/1, ``priv`` zero-extended, ``ticks`` broadcast
+    from the global scalar), matching the per-element accessors."""
+    regs = st.regs[reg_cpu, reg_idx]
+    words = st.mem[word_idx]
+    csr_out = []
+    for name, cc in zip(csr_names, csr_cpus):
+        if name == "ticks":
+            v = jnp.broadcast_to(st.ticks, cc.shape).astype(U64)
+        else:
+            v = getattr(st, name)[cc].astype(U64)
+        csr_out.append(v)
+    return regs, words, tuple(csr_out)

@@ -237,6 +237,19 @@ class PySim:
         if idx != 0:
             self.regs[c][idx] = v & MASK64
 
+    def commit_batch(self, regs=(), csrs=(), words=()):
+        """Batched host writes, mirroring
+        :meth:`repro.core.interface.JaxTarget.commit_batch`: GPRs as
+        ``(core, idx, val)``, CSR/core-state as ``(core, name, val)``,
+        memory words as ``(word_index, val)``.  Pure-Python state makes
+        it a plain replay of the per-element accessors in order."""
+        for c, idx, v in regs:
+            self.reg_write(c, idx, v)
+        for c, name, v in csrs:
+            self.csr_write(c, name, v)
+        for w, v in words:
+            self.mem_write_word(w << 3, v)
+
     # -- memory (host-side word/page access) ----------------------------
     def mem_read_word(self, pa):
         return unpack_from("<Q", self.mem, pa & self.mask & ~7)[0]

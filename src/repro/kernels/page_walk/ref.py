@@ -36,7 +36,7 @@ def _u(x):
     return jnp.uint64(x)
 
 
-def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask):
+def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask, base=None):
     """Vectorized Sv39 walk; lanes are independent cores.
 
     ``mem`` is the ``(mem_bytes // 8,)`` u64 word array; ``satp``/``va``/
@@ -44,6 +44,12 @@ def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask):
     ``(pa, fault, walk_words)`` where ``walk_words`` is ``(L, 3)`` u64 —
     the word index each level's PTE load touched, :data:`NO_WORD` for
     levels the walk never reached and for Bare lanes.
+
+    ``base`` (optional, ``(L,)`` u64) is a per-lane word offset into a
+    larger backing buffer — the flat-fleet kernel concatenates every
+    device's memory image into one array and offsets each lane into its
+    own device's partition.  All *returned* word indices (and ``pa``)
+    stay device-local; only the loads are offset.
     """
     bare = (satp >> _u(60)) != _u(8)
     need = _u(isa.PTE_U) | jnp.where(
@@ -57,7 +63,7 @@ def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask):
     for level in (2, 1, 0):
         idx = (va >> _u(12 + 9 * level)) & _u(0x1FF)
         widx = ((a + idx * _u(8)) & mask) >> _u(3)
-        pte = mem[widx]
+        pte = mem[widx if base is None else base + widx]
         valid = (pte & _u(isa.PTE_V)) != 0
         leaf = valid & ((pte & _u(isa.PTE_R | isa.PTE_X)) != 0)
         perm_ok = (pte & need) == need
@@ -74,7 +80,63 @@ def sv39_walk_ref(mem, satp, va, want_write, want_exec, mask):
     return pa, fault, jnp.stack(walk_words, axis=-1)
 
 
-def walk_fetch_block_ref(mem, satp, va, mask, block_words):
+def sv39_walk_leaf(mem, satp, va, want_write, want_exec, mask, base=None):
+    """:func:`sv39_walk_ref` plus the leaf metadata a translation cache
+    needs.  Returns ``(pa, fault, walk_words, perms, leaf0, leaf_widx)``:
+
+      * ``perms``     — the taken leaf PTE's low permission byte
+        (V/R/W/X/U/G/A/D), so a cached entry can re-check access rights
+        without touching memory (a read-filled entry must still refuse a
+        store when the PTE lacks W);
+      * ``leaf0``     — True only for a 4 KiB (level-0) leaf, the only
+        granularity the caches fill (mirroring PySim's TLB, which never
+        caches superpages);
+      * ``leaf_widx`` — word index of the backing leaf PTE
+        (:data:`NO_WORD` when there is none), which store-overlap
+        invalidation matches committed stores against.
+
+    The walk itself — ``pa``/``fault``/``walk_words`` — is bit-identical
+    to :func:`sv39_walk_ref`.
+    """
+    bare = (satp >> _u(60)) != _u(8)
+    need = _u(isa.PTE_U) | jnp.where(
+        want_exec, _u(isa.PTE_X),
+        jnp.where(want_write, _u(isa.PTE_W), _u(isa.PTE_R)))
+    a = (satp & _u((1 << 44) - 1)) << _u(12)
+    done = jnp.zeros(va.shape, bool)
+    fault = jnp.zeros(va.shape, bool)
+    pa = jnp.zeros(va.shape, U64)
+    perms = jnp.zeros(va.shape, U64)
+    leaf0 = jnp.zeros(va.shape, bool)
+    leaf_widx = jnp.full(va.shape, _u(NO_WORD))
+    walk_words = []
+    for level in (2, 1, 0):
+        idx = (va >> _u(12 + 9 * level)) & _u(0x1FF)
+        widx = ((a + idx * _u(8)) & mask) >> _u(3)
+        pte = mem[widx if base is None else base + widx]
+        valid = (pte & _u(isa.PTE_V)) != 0
+        leaf = valid & ((pte & _u(isa.PTE_R | isa.PTE_X)) != 0)
+        perm_ok = (pte & need) == need
+        off_mask = _u((1 << (12 + 9 * level)) - 1)
+        leaf_pa = (((pte >> _u(10)) << _u(12)) | (va & off_mask)) & mask
+        take = ~done
+        walk_words.append(jnp.where(take & ~bare, widx, _u(NO_WORD)))
+        taken_leaf = take & leaf & perm_ok
+        fault = fault | (take & (~valid | (leaf & ~perm_ok)))
+        pa = jnp.where(taken_leaf, leaf_pa, pa)
+        perms = jnp.where(taken_leaf, pte & _u(0xFF), perms)
+        if level == 0:
+            leaf0 = taken_leaf & ~bare
+            leaf_widx = jnp.where(leaf0, widx, leaf_widx)
+        done = done | (take & (~valid | leaf))
+        a = jnp.where(take & valid & ~leaf, (pte >> _u(10)) << _u(12), a)
+    fault = (fault | ~done) & ~bare
+    pa = jnp.where(bare, va, pa) & mask
+    return pa, fault, jnp.stack(walk_words, axis=-1), perms, leaf0, \
+        leaf_widx
+
+
+def walk_fetch_block_ref(mem, satp, va, mask, block_words, base=None):
     """Execute-translate ``va`` and gather a fetch block behind it.
 
     The block is ``block_words`` consecutive 32-bit instruction slots
@@ -82,16 +144,18 @@ def walk_fetch_block_ref(mem, satp, va, mask, block_words):
     only proves contiguity within one page; Bare lanes keep the same
     bound for uniformity).  Returns ``(pa, fault, walk_words, insts,
     nbytes)`` with ``insts`` ``(L, block_words)`` u32 and ``nbytes`` the
-    per-lane valid byte count (0 on fault).
+    per-lane valid byte count (0 on fault).  ``base`` is the flat-fleet
+    per-lane word offset (see :func:`sv39_walk_ref`).
     """
     f = jnp.zeros(va.shape, bool)
-    pa, fault, walk_words = sv39_walk_ref(mem, satp, va, f, ~f, mask)
+    pa, fault, walk_words = sv39_walk_ref(mem, satp, va, f, ~f, mask, base)
     remain = _u(0x1000) - (va & _u(0xFFF))
     nbytes = jnp.where(fault, _u(0),
                        jnp.minimum(remain, _u(4 * block_words)))
     offs = jnp.arange(block_words, dtype=U64) * _u(4)
     addr = pa[..., None] + offs
-    word = mem[(addr & mask) >> _u(3)]
+    widx = (addr & mask) >> _u(3)
+    word = mem[widx if base is None else base[..., None] + widx]
     insts = ((word >> (((addr >> _u(2)) & _u(1)) * _u(32))) &
              _u(0xFFFFFFFF)).astype(U32)
     return pa, fault, walk_words, insts, nbytes

@@ -141,12 +141,21 @@ def test_lint_sources_flags_seeded_antipatterns(tmp_path):
         "    for i in range(4):\n"
         "        vals.append(sess.t.csr_read(i, 'mepc'))"
         "  # analysis: allow-host-sync\n"
+        "    for i in range(31):\n"
+        "        t.reg_write(0, i, vals[i])\n"
+        "    for i in range(4):\n"
+        "        sess.t.mem_write_word(i * 8, 0)"
+        "  # analysis: allow-host-sync\n"
         "    return r1, r2, vals\n")
     found = lint_sources(paths=[bad])
     codes = sorted(f.code for f in found)
-    assert codes == ["host-sync", "nbytes-not-virtual", "unknown-op"]
+    assert codes == ["host-sync", "host-sync-write",
+                     "nbytes-not-virtual", "unknown-op"]
     hs = next(f for f in found if f.code == "host-sync")
     assert "t.reg_read" in hs.message and hs.line == 7
+    hw = next(f for f in found if f.code == "host-sync-write")
+    assert "t.reg_write" in hw.message and hw.line == 11
+    assert "commit_batch" in hw.message
 
 
 def test_lint_sources_flags_builder_arity(tmp_path):
@@ -468,14 +477,14 @@ def test_intra_transaction_write_then_read_not_stale():
     txn = (HtpTransaction()
            .reg_read(0, 5)           # prefetched: original value
            .reg_write(0, 5, 99)
-           .reg_read(0, 5)           # dirtied: direct read, sees 99
-           .reg_read(0, 6))          # prefetched
+           .reg_read(0, 5)           # dirtied: served from the write
+           .reg_read(0, 6))          # stage, not the device; prefetched
     res = sess.submit(txn, 0)
     assert res.values[0] == 1
     assert res.values[2] == 99
     assert res.values[3] == 0
     assert t.batch_calls == 1         # one fetch for the two clean reads
-    assert t.direct_reads == 1        # exactly the dirtied one
+    assert t.direct_reads == 0        # the dirtied read hits the stage
 
 
 def test_fetch_batch_matches_accessors_pysim():

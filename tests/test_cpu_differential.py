@@ -131,13 +131,26 @@ def test_differential_pallas_fetch_kernel():
 MEM = 1 << 21
 FUZZ_SEEDS = int(os.environ.get("FASE_FUZZ_SEEDS", "4"))
 
-#: JaxTarget configurations the fuzzer sweeps: the fast path with and
-#: without the fetch-block cache, and the scalar reference loop.
+#: Target configurations the fuzzer sweeps: the fast path with and
+#: without the fetch-block cache, the scalar reference loop, and the
+#: vmapped fleet path (a 1-device FleetTarget view — the stacked
+#: single-dispatch kernel must be conformant too, not just fast).
 TARGET_CONFIGS = [
     pytest.param(dict(fast_path=True, block_cache=True), id="fast"),
     pytest.param(dict(fast_path=True, block_cache=False), id="fast-nocache"),
     pytest.param(dict(fast_path=False), id="slow"),
+    pytest.param(dict(fleet_vmap=True), id="fleet-vmap"),
 ]
+
+
+def make_jt(nc, jt_kwargs, mem=None):
+    """Build the JAX-side target for a fuzzer config — a plain JaxTarget,
+    or device 0 of a 1-device FleetTarget for the ``fleet-vmap`` axis."""
+    kw = dict(jt_kwargs)
+    if kw.pop("fleet_vmap", False):
+        from repro.core.fleet.vmap import FleetTarget
+        return FleetTarget(1, nc, mem or MEM, **kw).view(0)
+    return JaxTarget(nc, mem or MEM, **kw)
 
 ALU_RR = ["add", "sub", "sll", "srl", "sra", "slt", "sltu", "xor", "or",
           "and", "mul", "mulh", "mulhu", "mulhsu", "div", "divu", "rem",
@@ -297,7 +310,7 @@ def run_lockstep(src, nc, jt_kwargs, mmu, chunk=379, max_chunks=400):
     slices, comparing the full architectural state after every slice;
     trapped cores are parked on both sides (end of that hart)."""
     img = asm.assemble(src)
-    jt = JaxTarget(nc, MEM, **jt_kwargs)
+    jt = make_jt(nc, jt_kwargs)
     ps = PySim(nc, MEM)
     for t in (jt, ps):
         for seg in img.segments:
@@ -351,7 +364,7 @@ _start:
     ecall
 """
     img = asm.assemble(src)
-    jt = JaxTarget(1, MEM, **jt_kwargs)
+    jt = make_jt(1, jt_kwargs)
     ps = PySim(1, MEM)
     for t in (jt, ps):
         for seg in img.segments:
@@ -386,7 +399,7 @@ site:
     ecall
 """
     img = asm.assemble(src)
-    jt = JaxTarget(1, MEM, **jt_kwargs)
+    jt = make_jt(1, jt_kwargs)
     ps = PySim(1, MEM)
     for t in (jt, ps):
         for seg in img.segments:
@@ -399,3 +412,234 @@ site:
         t.run(max_cycles=64)
     assert ps.reg_read(0, isa.reg_num("t1")) == 77
     assert_same_state(jt, ps, "smc")
+
+
+# ---------------------------------------------------------------------------
+# data-side translation cache invalidation (ROADMAP item 1, dtlb)
+# ---------------------------------------------------------------------------
+_PTE_FLAGS = (isa.PTE_V | isa.PTE_R | isa.PTE_W | isa.PTE_X | isa.PTE_U |
+              isa.PTE_A | isa.PTE_D)
+
+
+def _load_mmu(t, img, extra_vpn0=()):
+    """Load ``img`` under the fuzzer's Sv39 tables, optionally mapping
+    extra identity pages (e.g. the l0 table page itself, so the guest
+    can store over its own PTEs)."""
+    for seg in img.segments:
+        data = bytes(seg.data)
+        n = (len(data) + 7) // 8
+        words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+        for i, w in enumerate(words):
+            t.mem_write_word(seg.vaddr + 8 * i, int(w))
+    build_tables(t)
+    for vpn0 in extra_vpn0:
+        t.mem_write_word(4 * 4096 + vpn0 * 8, (vpn0 << 10) | _PTE_FLAGS)
+    t.redirect(0, img.entry)
+
+
+def _dtlb_targets():
+    from repro.core.fleet.vmap import FleetTarget
+    return [("dtlb8", JaxTarget(1, MEM, dtlb_ways=8)),
+            ("dtlb0", JaxTarget(1, MEM, dtlb_ways=0)),
+            ("slow", JaxTarget(1, MEM, fast_path=False)),
+            ("fleet", FleetTarget(1, 1, MEM).view(0))]
+
+
+def test_dtlb_store_over_cached_pte_rewalks_in_chunk():
+    """A guest store that overlaps a leaf PTE cached by the data-side
+    translation cache must kill the cached entry within the SAME chunk:
+    the next access re-walks and sees the remap, and an SMC store whose
+    PA came from a dtlb hit still invalidates the fetch block.  The
+    oracle is the historical walk-every-access interpreter (dtlb_ways=0
+    and the scalar slow path) — PySim's host-side translation cache
+    keeps the delayed-shootdown envelope and may legitimately serve the
+    stale mapping until an explicit sfence, so it is not compared here
+    (the fuzzer never maps page-table pages, keeping it in-envelope)."""
+    new_pte = (21 << 10) | _PTE_FLAGS        # remap vpn 20 -> ppn 21
+    patched = isa.enc_i(isa.OP_IMM, isa.reg_num("s6"), 0,
+                        isa.reg_num("s6"), 77)   # addi s6, s6, 77
+    src = f"""
+_start:
+    li s1, 0x14000
+    li s2, 0x4000
+    li t0, 0xAAAA
+    sd t0, 0(s1)
+    ld t1, 0(s1)
+    li t2, {new_pte}
+    sd t2, 160(s2)
+    ld t3, 0(s1)
+    li t4, 0xBBBB
+    sd t4, 0(s1)
+    ld t5, 0(s1)
+    la s3, site
+    lw s4, 0(s3)
+    li s5, {patched}
+    sw s5, 0(s3)
+    nop
+site:
+    nop
+    li a7, 93
+    ecall
+"""
+    img = asm.assemble(src)
+    results = []
+    for name, t in _dtlb_targets():
+        _load_mmu(t, img, extra_vpn0=(4,))   # map the l0 table page
+        t.run(max_cycles=500)
+        got = dict(t1=t.reg_read(0, isa.reg_num("t1")),
+                   t3=t.reg_read(0, isa.reg_num("t3")),
+                   t5=t.reg_read(0, isa.reg_num("t5")),
+                   s6=t.reg_read(0, isa.reg_num("s6")),
+                   old=t.mem_read_word(0x14000),
+                   new=t.mem_read_word(0x15000),
+                   ticks=t.get_ticks(), instret=t.get_instret(0))
+        # fresh-translation semantics: the post-remap load misses the
+        # old page, the post-remap store lands on the new one, and the
+        # patched instruction executed
+        assert got["t1"] == 0xAAAA, name
+        assert got["t3"] == 0, name
+        assert got["t5"] == 0xBBBB, name
+        assert got["s6"] == 77, name
+        assert got["old"] == 0xAAAA and got["new"] == 0xBBBB, name
+        results.append((name, got))
+    assert all(g == results[0][1] for _, g in results), results
+
+
+def test_dtlb_host_pte_change_with_sfence_rewalks():
+    """Host-driven PTE change + explicit sfence between chunks: every
+    backend (including PySim — this IS the delayed-shootdown envelope)
+    must observe the new mapping in the next chunk, because the jitted
+    data-side cache is chunk-local and PySim's host cache drops on
+    sfence."""
+    src = """
+_start:
+    li s1, 0x14000
+    li s9, 100000
+1:
+    ld t1, 0(s1)
+    addi s9, s9, -1
+    bnez s9, 1b
+    li a7, 93
+    ecall
+"""
+    img = asm.assemble(src)
+    new_pte = (21 << 10) | _PTE_FLAGS
+    targets = _dtlb_targets() + [("pysim", PySim(1, MEM))]
+    for name, t in targets:
+        _load_mmu(t, img)
+        t.mem_write_word(0x14000, 0x111)
+        t.mem_write_word(0x15000, 0x222)
+        t.run(max_cycles=90)
+        assert t.reg_read(0, isa.reg_num("t1")) == 0x111, name
+        t.mem_write_word(4 * 4096 + 20 * 8, new_pte)   # remap vpn 20
+        t.sfence(0)
+        t.run(max_cycles=90)
+        assert t.reg_read(0, isa.reg_num("t1")) == 0x222, name
+
+
+# ---------------------------------------------------------------------------
+# multi-device vmapped fleet (shared-nothing conformance + dispatch count)
+# ---------------------------------------------------------------------------
+def _load_image(t, img, nc, mmu=True):
+    for seg in img.segments:
+        data = bytes(seg.data)
+        n = (len(data) + 7) // 8
+        words = np.frombuffer(data.ljust(n * 8, b"\0"), dtype=np.uint64)
+        for i, w in enumerate(words):
+            t.mem_write_word(seg.vaddr + 8 * i, int(w))
+    if mmu:
+        build_tables(t)
+    for c in range(nc):
+        t.reg_write(c, 10, c)
+        t.redirect(c, img.entry)
+
+
+def test_fleet_vmap_multi_device_shared_nothing():
+    """Two devices in ONE stacked FleetTarget run *different* fuzzer
+    programs concurrently — each global chunk drives both lanes through
+    a single ``run_global`` — and every device must match its own PySim
+    per chunk.  Shared-nothing: a lane crossing into its neighbour's
+    state would corrupt one of the two differentials."""
+    from repro.core.fleet.vmap import FleetTarget
+    D, nc, chunk = 2, 2, 379
+    ft = FleetTarget(D, nc, MEM)
+    views = [ft.view(d) for d in range(D)]
+    sims = [PySim(nc, MEM) for _ in range(D)]
+    for d, seed in enumerate((0, 1000)):
+        img = asm.assemble(_ProgGen(seed).build())
+        _load_image(views[d], img, nc)
+        _load_image(sims[d], img, nc)
+    for step in range(400):
+        ft.run_global([chunk] * D)        # ONE dispatch advances the fleet
+        done = True
+        for d in range(D):
+            sims[d].run(max_cycles=chunk)
+            assert_same_state(views[d], sims[d], f"dev{d} chunk {step}")
+            for t in (views[d], sims[d]):
+                for c in t.pending_cores():
+                    t.clear_pending(c)
+                    t.park(c)
+            done &= all(sims[d].priv[c] == 3 for c in range(nc))
+        if done:
+            return
+    raise AssertionError("programs did not finish within the chunk budget")
+
+
+def test_fleet_global_chunk_is_one_dispatch(monkeypatch):
+    """N=4 devices advance in a single XLA dispatch: one ``run_global``
+    enters the jitted vmapped kernel exactly once, and every device's
+    clock moves."""
+    from repro.core.fleet.vmap import FleetTarget
+    from repro.core.target import cpu as _cpu
+
+    calls = []
+    real = _cpu.run_chunk_fleet
+    monkeypatch.setattr(_cpu, "run_chunk_fleet",
+                        lambda *a, **kw: (calls.append(1), real(*a, **kw))[1])
+    D, nc = 4, 1
+    ft = FleetTarget(D, nc, MEM)
+    img = asm.assemble(_ProgGen(3).build())
+    for d in range(D):
+        _load_image(ft.view(d), img, nc)
+    ft.run_global([500] * D)
+    assert len(calls) == 1
+    assert ft.dispatch_count == 1
+    for d in range(D):
+        assert ft.view(d).get_ticks() > 0, d
+
+
+def test_fleet_run_synchronous_matches_solo_runs():
+    """Lockstep fleet execution (one dispatch per global chunk) is a
+    pure scheduling change: two *different* full-runtime jobs driven by
+    ``run_synchronous`` must reproduce their solo per-device timelines
+    tick for tick — including after the shorter job exits and its lane
+    rides along with budget 0."""
+    from repro.core.fleet import FleetRuntime, Job
+    from repro.core.workloads import graphgen
+
+    memb = 1 << 22
+    g = graphgen.rmat(4, 4, weights=True)
+
+    def jobs():
+        return [Job("bc", ["g.bin", "1", "1"], files={"g.bin": g}),
+                Job("bc", ["g.bin", "2", "1"], files={"g.bin": g})]
+
+    fleet = FleetRuntime(n_devices=2, fleet_vmap=True,
+                         target_cfg=dict(n_cores=2, mem_bytes=memb),
+                         link="pcie")
+    res = fleet.run_synchronous(jobs())
+    solo = FleetRuntime(n_devices=2,
+                        make_target=lambda: JaxTarget(2, memb),
+                        link="pcie")
+    ref = [solo.run_job(solo.devices[i], j)
+           for i, j in enumerate(jobs())]
+    for d, (r, s) in enumerate(zip(res, ref)):
+        assert r.report.ticks == s.report.ticks, d
+        assert r.report.instret == s.report.instret, d
+        assert r.report.stdout == s.report.stdout, d
+    # the whole two-job fleet ran on one dispatch stream: every global
+    # chunk is ONE vmapped dispatch, never a per-device pair
+    chunks = fleet.fleet_target.dispatch_count
+    longest = max(r.report.ticks for r in res)
+    assert 1 <= chunks <= longest // fleet.fleet_target.chunk_cycles + \
+        sum(r.report.sched["exceptions"] for r in res) + 2

@@ -42,6 +42,7 @@ TARGETS = [
     pytest.param("pysim", None, id="pysim"),
     pytest.param("jax", dict(fast_path=True), id="jax-fast"),
     pytest.param("jax", dict(fast_path=False), id="jax-slow"),
+    pytest.param("fleet-vmap", None, id="fleet-vmap"),
 ]
 
 
@@ -73,16 +74,21 @@ def test_gang_bc_fabric_golden(target, opts):
     from repro.core.fleet import FleetRuntime, Job
     from repro.core.net import GangJob, Switch
 
-    def make_target():
-        if target == "pysim":
-            from repro.core.target.pysim import PySim
-            return PySim(1, 1 << 22)
-        from repro.core.interface import JaxTarget
-        return JaxTarget(1, 1 << 22, **(opts or {}))
-
     parts = graphgen.partition(graphgen.rmat(4, 4, weights=False), 2)
-    fleet = FleetRuntime(n_devices=2, make_target=make_target,
-                         link="pcie", fabric=Switch(**net_kwargs()))
+    if target == "fleet-vmap":
+        fleet = FleetRuntime(n_devices=2, fleet_vmap=True,
+                             target_cfg=dict(n_cores=1, mem_bytes=1 << 22),
+                             link="pcie", fabric=Switch(**net_kwargs()))
+    else:
+        def make_target():
+            if target == "pysim":
+                from repro.core.target.pysim import PySim
+                return PySim(1, 1 << 22)
+            from repro.core.interface import JaxTarget
+            return JaxTarget(1, 1 << 22, **(opts or {}))
+
+        fleet = FleetRuntime(n_devices=2, make_target=make_target,
+                             link="pcie", fabric=Switch(**net_kwargs()))
     rg = fleet.start_gang(GangJob(
         [Job("bc", ["part.bin", "1", "1"], files={"part.bin": p})
          for p in parts], superstep_ticks=40_000, halo_pages=4))
@@ -102,7 +108,7 @@ def test_registry_target_kwargs_drive_the_interpreter():
 
     kw = target_kwargs(FASE_ROCKET)
     assert kw == dict(fast_path=True, issue_width=8, block_words=16,
-                      block_cache=True, fetch_kernel="ref")
+                      block_cache=True, fetch_kernel="ref", dtlb_ways=8)
     rt, rep, _ = run_workload("hello", [], mode="fase", n_cores=1,
                               mem=1 << 22, target="jax", target_opts=kw)
     assert rep.ticks == HELLO_UART_TICKS

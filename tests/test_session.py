@@ -177,6 +177,103 @@ def test_runtime_end_to_end_on_link(link):
     assert rt.session.stats.transactions > 0
 
 
+# ---------------------------------------------------------------------------
+# Write-stage staleness (ROADMAP item 1, write batching)
+# ---------------------------------------------------------------------------
+_ST_REGS = [0, 5, 6, 7]
+_ST_CSRS = ["mepc", "mtval", "mcause", "satp"]
+_ST_ADDRS = [0x8000, 0x8008, 0x8010]
+_M64 = (1 << 64) - 1
+
+
+def _staleness_ops(seed):
+    """One randomized read/write interleaving over a small resource pool,
+    opening with directed read->write->read triples for every kind."""
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    ops = []
+    for r in _ST_REGS:
+        ops += [("rr", r), ("rw", r, int(rng.randint(0, 1 << 62))), ("rr", r)]
+    for n in _ST_CSRS:
+        ops += [("cr", n), ("cw", n, int(rng.randint(0, 1 << 62))), ("cr", n)]
+    for a in _ST_ADDRS:
+        ops += [("mr", a), ("mw", a, int(rng.randint(0, 1 << 62))), ("mr", a)]
+    kinds = ["rr", "rw", "cr", "cw", "mr", "mw"]
+    for _ in range(30):
+        k = kinds[rng.randint(len(kinds))]
+        if k in ("rr", "rw"):
+            res = _ST_REGS[rng.randint(len(_ST_REGS))]
+        elif k in ("cr", "cw"):
+            res = _ST_CSRS[rng.randint(len(_ST_CSRS))]
+        else:
+            res = _ST_ADDRS[rng.randint(len(_ST_ADDRS))]
+        if k.endswith("w"):
+            ops.append((k, res, int(rng.randint(0, 1 << 62))))
+        else:
+            ops.append((k, res))
+    return ops
+
+
+def _run_staleness(ops, t):
+    sess = HtpSession(t, UartChannel())
+    txn = HtpTransaction()
+    regs = {r: 0 for r in _ST_REGS}
+    csrs = {n: 0 for n in _ST_CSRS}
+    mem = {a: 0 for a in _ST_ADDRS}
+    expect = {}                       # request index -> modelled value
+    for op in ops:
+        i, k = len(txn), op[0]
+        if k == "rw":
+            txn.reg_write(0, op[1], op[2])
+            if op[1]:
+                regs[op[1]] = op[2] & _M64
+        elif k == "rr":
+            txn.reg_read(0, op[1])
+            expect[i] = regs[op[1]]
+        elif k == "cw":
+            txn.csr_write(0, op[1], op[2])
+            csrs[op[1]] = op[2] & _M64
+        elif k == "cr":
+            txn.csr_read(0, op[1])
+            expect[i] = csrs[op[1]]
+        elif k == "mw":
+            txn.mem_write(0, op[1], op[2])
+            mem[op[1]] = op[2] & _M64
+        else:
+            txn.mem_read(0, op[1])
+            expect[i] = mem[op[1]]
+    res = sess.submit(txn, 0)
+    for i, want in expect.items():
+        assert int(res.values[i]) & _M64 == want, (i, ops)
+    for r, v in regs.items():
+        assert int(t.reg_read(0, r)) & _M64 == v, r
+    for n, v in csrs.items():
+        assert int(t.csr_read(0, n)) & _M64 == v, n
+    for a, v in mem.items():
+        assert int(t.mem_read_word(a)) & _M64 == v, hex(a)
+
+
+@pytest.mark.parametrize("backend", ["pysim", "jax", "fleet-vmap"])
+def test_write_batch_staleness_property(backend):
+    """Property: a read of a reg/CSR/word written EARLIER IN THE SAME
+    transaction must observe the staged value, on every backend, with
+    the final device state matching a plain sequential model.  This is
+    the write stage's dirty-tracking contract — such reads miss the
+    transaction's prefetch batch and must fall back to the stage, never
+    to the stale device copy."""
+    for seed in range(6):
+        ops = _staleness_ops(seed)
+        if backend == "pysim":
+            t = PySim(1, 1 << 20)
+        elif backend == "jax":
+            from repro.core.interface import JaxTarget
+            t = JaxTarget(1, 1 << 20)
+        else:
+            from repro.core.fleet.vmap import FleetTarget
+            t = FleetTarget(1, 1, 1 << 20).view(0)
+        _run_staleness(ops, t)
+
+
 def test_pcie_link_stalls_less_than_uart():
     reps = {}
     for link in ("uart", "pcie"):
